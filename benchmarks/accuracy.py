@@ -1,0 +1,49 @@
+"""Per-mode accuracy vs fp64 golden + AUTO-mode behaviour — the paper's
+graceful-degradation claim (modes trade accuracy for cost monotonically) and
+the mode-1 controller picking the cheapest adequate width."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import PrecisionMode, mp_matmul, select_mode_index
+from repro.core.modes import MODE_TABLE
+from repro.kernels.ref import matmul_golden_f64
+
+MODES = [PrecisionMode.M8, PrecisionMode.M16, PrecisionMode.M23,
+         PrecisionMode.M36, PrecisionMode.M52]
+
+
+def run():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.standard_normal((256, 512)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    gold = matmul_golden_f64(a, b)
+    gn = np.linalg.norm(gold)
+    prev = 1.0
+    for mode in MODES:
+        out = mp_matmul(a, b, mode)
+        rel = float(np.linalg.norm(np.asarray(out, np.float64) - gold) / gn)
+        ok = rel <= prev * 1.5
+        emit(f"accuracy/{MODE_TABLE[mode].mantissa_bits}bit", 0.0,
+             f"rel_err={rel:.3e};bound={MODE_TABLE[mode].rel_err_bound:.1e}"
+             f";monotone={'Y' if ok else 'N'}")
+        prev = max(rel, 1e-12)
+
+    # AUTO mode: integers -> M8; full-mantissa floats -> >= M16
+    ai = jnp.asarray(rng.integers(-100, 100, (256, 512)), jnp.float32)
+    bi = jnp.asarray(rng.integers(-100, 100, (512, 256)), jnp.float32)
+    emit("accuracy/auto_mode_integers", 0.0,
+         f"selected=mode{1 + int(select_mode_index(ai, bi)) + 1}"
+         f";expect=mode2_M8")
+    emit("accuracy/auto_mode_floats", 0.0,
+         f"selected=mode{1 + int(select_mode_index(a, b)) + 1}"
+         f";expect>=mode3_M16")
+    auto_out = mp_matmul(ai, bi, PrecisionMode.AUTO)
+    exact = bool(jnp.all(auto_out == jnp.asarray(np.asarray(ai, np.float64)
+                                                 @ np.asarray(bi, np.float64),
+                                                 jnp.float32)))
+    emit("accuracy/auto_mode_integer_exactness", 0.0, f"exact={exact}")
+
+
+if __name__ == "__main__":
+    run()

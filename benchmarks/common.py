@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing, CSV emission, v5e roofline math."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS_BF16
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (CPU; relative use only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def v5e_roofline_us(flops: float, bytes_moved: float) -> float:
+    """Ideal v5e time (µs) = max(compute, memory) term."""
+    return max(flops / PEAK_FLOPS_BF16, bytes_moved / HBM_BW) * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,66 @@
+"""Roofline report generator — reads the dry-run artifacts and emits the
+EXPERIMENTS.md §Roofline table (plus a CSV line per cell for run.py)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh_prefix="singlepod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"{mesh_prefix}_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("tag"):
+            continue  # tagged perf-iteration artifacts live in §Perf only
+        recs.append(rec)
+    return recs
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | GiB/chip | compute s | memory s | collective s |"
+        " bound | 6ND/HLO | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"SKIP: {r['reason'][:40]} | — | — |")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]["peak_bytes_est"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mem:.1f} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | **{ro['dominant']}** "
+            f"| {ro['useful_flops_fraction']:.2f} | {ro['mfu_bound']:.3f} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline/no_artifacts", 0.0,
+             "run_repro.launch.dryrun_first")
+        return
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        ro = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}", ro["bound_s"] * 1e6,
+             f"bound={ro['dominant']};mfu_bound={ro['mfu_bound']:.3f};"
+             f"mem_gib={r['memory']['peak_bytes_est']/2**30:.1f}")
+    worst = min((r for r in ok if r["roofline"]["mfu_bound"] > 0
+                 and r["shape"] in ("train_4k", "prefill_32k")),
+                key=lambda r: r["roofline"]["mfu_bound"], default=None)
+    if worst:
+        emit("roofline/worst_cell", 0.0,
+             f"{worst['arch']}/{worst['shape']}"
+             f";mfu={worst['roofline']['mfu_bound']:.3f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

@@ -1,0 +1,19 @@
+"""Benchmark orchestrator — one module per paper table + accuracy + e2e +
+roofline.  Prints ``name,us_per_call,derived`` CSV."""
+
+
+def main() -> None:
+    from benchmarks import (accuracy, e2e_train, roofline, table2_multiplier,
+                            table3_fp_units, table4_comparison)
+
+    print("name,us_per_call,derived")
+    table2_multiplier.run()
+    table3_fp_units.run()
+    table4_comparison.run()
+    accuracy.run()
+    e2e_train.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table II analogue — Karatsuba-Urdhva multiplier vs operand width.
+
+FPGA axis (slices / LUTs / delay-ns / fmax) → TPU axis:
+  mantissa width  -> precision mode (8/16/24/36-bit ~ M8/M16/M23/M36)
+  slices / LUTs   -> MXU passes (limb products) and VMEM working set
+  delay           -> v5e roofline µs for a fixed 512x1024x512 matmul
+  (+ measured CPU-interpret µs as a relative sanity column)
+
+Paper claim validated: cost grows sub-quadratically with width thanks to the
+Karatsuba cut (3/6/15 passes instead of 4/9/25).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us, v5e_roofline_us
+from repro.core.modes import MODE_TABLE, PrecisionMode
+from repro.kernels import ops
+
+M, K, N = 512, 1024, 512
+BITS = {PrecisionMode.M8: 8, PrecisionMode.M16: 16, PrecisionMode.M23: 24,
+        PrecisionMode.M36: 36}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    for mode, bits in BITS.items():
+        spec = MODE_TABLE[mode]
+        passes = spec.n_products
+        naive = spec.n_limbs ** 2
+        flops = 2 * M * K * N * passes
+        bytes_moved = (M * K + K * N) * 4 + M * N * 4
+        ideal_us = v5e_roofline_us(flops, bytes_moved)
+        cpu_us = time_us(
+            lambda a=a, b=b, m=mode: ops.mp_matmul_pallas(a, b, m,
+                                                          interpret=True),
+            warmup=1, iters=3)
+        emit(f"table2/{bits}bit_multiplier", cpu_us,
+             f"passes={passes}/{naive}_naive;v5e_ideal_us={ideal_us:.1f};"
+             f"flops={flops:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Table III analogue — full floating-point multiplier units per mode.
+
+The FPGA 'FP unit' = sign XOR + exponent add + mantissa multiplier + rounding;
+our FP unit = the complete mp_matmul op (IEEE ops handle sign/exponent for
+free on TPU).  Measured at a transformer-layer shape per mode, against the
+fp32 XLA-native unit (the 'double-precision fully-fledged' endpoint maps to
+M52)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us, v5e_roofline_us
+from repro.core import mp_matmul
+from repro.core.modes import MODE_TABLE, PrecisionMode
+
+M, K, N = 2048, 4096, 4096  # one FFN-ish layer tile
+
+MODES = [PrecisionMode.M8, PrecisionMode.M16, PrecisionMode.M23,
+         PrecisionMode.M36, PrecisionMode.M52]
+
+
+def run():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    base_flops = 2 * M * K * N
+    for mode in MODES:
+        spec = MODE_TABLE[mode]
+        f = jax.jit(lambda a, b, m=mode: mp_matmul(a, b, m, backend="ref"))
+        cpu_us = time_us(f, a, b, warmup=1, iters=3)
+        flops = base_flops * spec.n_products
+        bytes_moved = (M * K + K * N) * 4 + M * N * 4
+        emit(f"table3/fp_unit_{spec.mantissa_bits}bit", cpu_us,
+             f"v5e_ideal_us={v5e_roofline_us(flops, bytes_moved):.1f};"
+             f"passes={spec.n_products};"
+             f"rel_err_bound={spec.rel_err_bound:.1e}")
+    # XLA-native fp32 reference unit
+    f32 = jax.jit(lambda a, b: a @ b)
+    emit("table3/fp_unit_xla_f32_reference", time_us(f32, a, b, warmup=1,
+                                                     iters=3),
+         f"v5e_ideal_us=n/a_runs_at_fp32_matmul_rate")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Precision-mode ablation: train the same model under every mode policy and
+print the loss-vs-cost frontier (the paper's accuracy/power trade-off).
+
+    PYTHONPATH=src python examples/precision_sweep.py --steps 30
+"""
+import argparse
+import time
+
+from repro.configs.registry import get_config
+from repro.core.modes import MODE_TABLE, PrecisionMode
+from repro.core.policy import PrecisionPolicy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw
+from repro.train import trainer as trainer_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=33,
+                                  global_batch=8))
+
+    policies = {
+        "mode2_M8": PrecisionPolicy.train_fast(),
+        "mode3_M16": PrecisionPolicy.train_default(),
+        "mode4_M23": PrecisionPolicy.full_fp32(),
+        "mode1_AUTO": PrecisionPolicy.auto(),
+    }
+    print(f"{'policy':12s} {'final loss':>10s} {'s/step':>8s} "
+          f"{'fwd passes':>10s}")
+    for name, pol in policies.items():
+        tcfg = trainer_lib.TrainerConfig(
+            opt=adamw.AdamWConfig(lr=3e-3), total_steps=args.steps, warmup=2)
+        tr = trainer_lib.Trainer(cfg, tcfg, policy=pol)
+        t0 = time.perf_counter()
+        _, hist = tr.run(pipe, num_steps=args.steps, log_every=0)
+        dt = (time.perf_counter() - t0) / args.steps
+        passes = ("dyn" if pol.ffn == PrecisionMode.AUTO
+                  else str(MODE_TABLE[pol.ffn].n_products))
+        print(f"{name:12s} {hist[-1]:10.4f} {dt:8.2f} {passes:>10s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Loop-aware HLO accounting.
+
+XLA's ``cost_analysis()`` counts a while-loop body ONCE, so any scanned-layers
+model under-reports FLOPs/bytes/collectives by ~n_layers×.  This parser reads
+the compiled HLO text, builds the computation call graph, infers while-loop
+trip counts from their condition computations, and rolls up:
+
+  * dot FLOPs           (2 · prod(out_dims) · prod(contracting_dims))
+  * dot operand/output bytes  (HBM-traffic proxy at dot granularity)
+  * collective bytes    (all-gather / all-reduce / reduce-scatter /
+                         all-to-all / collective-permute output shapes)
+
+multiplied through fusion/call/while edges.  Validated against
+``cost_analysis`` on unrolled models in tests/test_hlo_parser.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_ANY_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}]+))\s+([\w\-]+)\(")
+_CALLEE_RE = re.compile(
+    r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_ANY_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    own: Totals = dataclasses.field(default_factory=Totals)
+    # call sites: (callee_name, multiplier_kind) where kind is "call"/"while"
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 0          # trip-count heuristic for condition comps
+    shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line) and ("(" in line):
+            hdr = line[6:] if line.startswith("ENTRY ") else line
+            name = hdr.strip().lstrip("%").split("(", 1)[0].strip()
+            if name:
+                cur = Computation(name)
+                comps[name] = cur
+                if line.startswith("ENTRY"):
+                    entry = name
+                continue
+        if line.startswith("}"):
+            continue
+        if cur is None:
+            continue
+        _parse_line(line, cur)
+    return comps, entry
+
+
+def _parse_line(line: str, comp: Computation):
+    mc = _CONST_RE.search(line)
+    if mc:
+        comp.max_const = max(comp.max_const, int(mc.group(1)))
+
+    md = _DEF_RE.match(line)
+    if not md:
+        return
+    name, rhs = md.group(1), md.group(2)
+    mo = _OP_RE.match(rhs)
+    if not mo:
+        return
+    out_shape_str, op = mo.group(1), mo.group(2)
+    comp.shapes[name] = out_shape_str
+
+    base_op = re.sub(r"-(start|done)$", "", op)
+    if base_op in _COLLECTIVES:
+        if op.endswith("-done"):
+            return
+        b = _shape_bytes(out_shape_str)
+        comp.own.coll_bytes += b
+        comp.own.coll_by_kind[base_op] = \
+            comp.own.coll_by_kind.get(base_op, 0.0) + b
+        return
+
+    if op == "while":
+        m = _CALLEE_RE.findall(rhs)
+        cond = body = None
+        for mm in re.finditer(r"(condition|body)=%?([\w.\-]+)", rhs):
+            if mm.group(1) == "condition":
+                cond = mm.group(2)
+            else:
+                body = mm.group(2)
+        if cond and body:
+            comp.whiles.append((cond, body))
+        return
+
+    if op in ("dot", "convolution"):
+        comp.own.flops += _dot_flops(rhs, out_shape_str, comp)
+        comp.own.dot_bytes += _dot_bytes(rhs, out_shape_str, comp)
+
+    for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", rhs):
+        comp.calls.append((mm.group(1), "call"))
+    mb = _BRANCHES_RE.search(rhs)
+    if mb:
+        for b in mb.group(1).split(","):
+            comp.calls.append((b.strip().lstrip("%"), "call"))
+
+
+def _out_elems(out_shape_str: str) -> int:
+    n = 1
+    for _, dims in _shape_dims(out_shape_str)[:1]:
+        for d in dims:
+            n *= d
+    return n
+
+
+def _dot_flops(rhs: str, out_shape_str: str, comp: Computation) -> float:
+    out_n = _out_elems(out_shape_str)
+    # contracting dim sizes from the lhs operand's shape
+    mct = _CONTRACT_RE.search(rhs)
+    mop = _OPERANDS_RE.search(rhs)
+    k = 1
+    if mct and mop:
+        operands = [o.strip().lstrip("%") for o in mop.group(1).split(",")]
+        if operands:
+            lhs_shape = comp.shapes.get(operands[0], "")
+            dims_list = _shape_dims(lhs_shape)
+            if dims_list:
+                _, lhs_dims = dims_list[0]
+                for idx in (mct.group(1).split(",") if mct.group(1) else []):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+    return 2.0 * out_n * k
+
+
+def _dot_bytes(rhs: str, out_shape_str: str, comp: Computation) -> float:
+    total = _shape_bytes(out_shape_str)
+    mop = _OPERANDS_RE.search(rhs)
+    if mop:
+        for o in mop.group(1).split(","):
+            total += _shape_bytes(comp.shapes.get(o.strip().lstrip("%"), ""))
+    return total
+
+
+def rollup(comps: Dict[str, Computation], entry: str) -> Totals:
+    memo: Dict[str, Totals] = {}
+
+    def total_of(name: str) -> Totals:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        t = Totals()
+        if comp is None:
+            memo[name] = t
+            return t
+        memo[name] = t  # break cycles defensively
+        t.add(comp.own)
+        for callee, _ in comp.calls:
+            t.add(total_of(callee))
+        for cond, body in comp.whiles:
+            trips = max(1, comps.get(cond, Computation(cond)).max_const)
+            t.add(total_of(body), mult=trips)
+            t.add(total_of(cond), mult=trips + 1)
+        return t
+
+    return total_of(entry)
+
+
+def analyze_hlo(text: str) -> Totals:
+    comps, entry = parse(text)
+    if entry is None:
+        return Totals()
+    return rollup(comps, entry)

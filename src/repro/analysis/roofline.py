@@ -1,0 +1,174 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+cost_analysis() reports per-partition (per-chip) numbers after SPMD
+partitioning (verified empirically).  Collective bytes are parsed from the
+compiled HLO text: the sum of operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (these shapes are already
+per-partition too).
+
+Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e constants (per chip) ----------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link (spec-provided constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over all tensors in an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def to_dict(self):
+        return {"total_bytes": self.total_bytes, "count": self.count,
+                "by_kind": dict(self.by_kind)}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in compiled HLO.
+
+    `-start` ops are counted; their `-done` twins are skipped (same tensor).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        stats.total_bytes += b
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + b
+        stats.count += 1
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_global: float = 0.0
+    n_chips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_chip / ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global) — remat/redundancy waste meter."""
+        hlo_global = self.flops_per_chip * self.n_chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound — the score."""
+        if self.bound_s <= 0:
+            return 0.0
+        achieved = self.model_flops_global / self.bound_s
+        return achieved / (self.n_chips * PEAK_FLOPS_BF16)
+
+    def to_dict(self):
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_bound": self.mfu_bound,
+            "n_chips": self.n_chips,
+        }
+
+
+def model_flops(cfg, phase: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (fwd-only), N = active params."""
+    n_active = cfg.active_param_count()
+    tokens = seq_len * global_batch if phase != "decode" else global_batch
+    mult = 6.0 if phase == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def analyze(cost: dict, mem, hlo_text: str, *, n_chips: int,
+            model_flops_global: float) -> Roofline:
+    """Prefer the loop-aware HLO parser (hlo_parser.py): raw cost_analysis
+    counts while-loop (scanned-layers) bodies once.  The raw values are kept
+    by the caller for reference; validation: tests/test_hlo_parser.py."""
+    from repro.analysis import hlo_parser
+
+    tot = hlo_parser.analyze_hlo(hlo_text)
+    flops = max(tot.flops, float(cost.get("flops", 0.0)))
+    # HBM-bytes estimate: loop-corrected dot traffic vs XLA's (fusion-aware
+    # but loop-blind) figure — take the max as the honest lower bound of
+    # traffic, since each misses something the other sees.
+    bytes_est = max(tot.dot_bytes, float(cost.get("bytes accessed", 0.0)))
+    return Roofline(
+        flops_per_chip=flops,
+        bytes_per_chip=bytes_est,
+        collective_bytes_per_chip=float(tot.coll_bytes),
+        model_flops_global=model_flops_global,
+        n_chips=n_chips,
+    )

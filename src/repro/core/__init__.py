@@ -1,0 +1,22 @@
+"""Core MPFP library: the paper's run-time reconfigurable multi-precision
+multiplier as a composable JAX primitive.  See DESIGN.md §2."""
+from repro.core.modes import (  # noqa: F401
+    MODE_TABLE,
+    ModeSpec,
+    PrecisionMode,
+    STATIC_MODES,
+    mode_for_limbs,
+    spec,
+    validate_mode_pair,
+)
+from repro.core.limbs import DD, decompose, decompose_dd, reconstruct  # noqa: F401
+from repro.core.mpmatmul import (  # noqa: F401
+    mp_dense,
+    mp_matmul,
+    mode_flops,
+    set_default_backend,
+    get_default_backend,
+)
+from repro.core.auto import mp_matmul_auto, select_mode_index  # noqa: F401
+from repro.core.policy import PrecisionPolicy, get_policy  # noqa: F401
+from repro.core.classify import classify, exception_counts, all_finite  # noqa: F401

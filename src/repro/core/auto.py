@@ -1,0 +1,95 @@
+"""AUTO mode (paper mode 1): the controller analyzes both operands and selects
+the cheapest adequate precision, then dispatches to exactly one static branch.
+
+Paper: "The optimum mode is selected by counting the number of zeroes after a
+leading 1" — i.e. how many significant mantissa bits the operands actually
+carry.  Tensor analogue: the smallest limb count whose rounding residual is
+negligible (limbs.significant_limbs).  Both operands are analyzed and the max
+requirement wins (the safe consensus of the paper's both-operands-must-agree
+rule).
+
+``lax.switch`` compiles all candidate branches — the hardware parallel of the
+paper instantiating all multiplier units — but executes only the selected one
+("only the selected multiplier unit will be in ON state").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import limbs as limbs_lib
+from repro.core.modes import MODE_TABLE, PrecisionMode
+
+# default candidate set: the fp32-representable modes
+DEFAULT_CANDIDATES: Tuple[PrecisionMode, ...] = (
+    PrecisionMode.M8,
+    PrecisionMode.M16,
+    PrecisionMode.M23,
+)
+
+
+def select_mode_index(
+    a: jax.Array,
+    b: jax.Array,
+    candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES,
+    *,
+    tol: float = 2.0**-13,
+) -> jax.Array:
+    """Traced int32 index into ``candidates`` — the mode-select controller."""
+    max_limbs = max(MODE_TABLE[m].n_limbs for m in candidates)
+    ka = limbs_lib.significant_limbs(a, tol=tol, max_limbs=max_limbs)
+    kb = limbs_lib.significant_limbs(b, tol=tol, max_limbs=max_limbs)
+    k = jnp.maximum(ka, kb)  # consensus: the wider requirement wins
+    # map required limb count -> first candidate with n_limbs >= k
+    idx = jnp.int32(len(candidates) - 1)
+    for i in range(len(candidates) - 1, -1, -1):
+        enough = jnp.int32(MODE_TABLE[candidates[i]].n_limbs) >= k
+        idx = jnp.where(enough, jnp.int32(i), idx)
+    return idx
+
+
+def mp_matmul_auto(
+    a: jax.Array,
+    b: jax.Array,
+    candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+    bwd_mode: Optional[PrecisionMode] = None,
+    tol: float = 2.0**-13,
+) -> jax.Array:
+    """Run-time reconfigurable matmul: analyze -> switch -> one branch runs."""
+    from repro.core import mpmatmul  # circular-import avoidance
+
+    idx = select_mode_index(a, b, candidates, tol=tol)
+
+    branches = [
+        functools.partial(
+            mpmatmul.mp_matmul,
+            mode=m,
+            bwd_mode=bwd_mode,
+            backend=backend,
+            out_dtype=out_dtype,
+        )
+        for m in candidates
+    ]
+    return lax.switch(idx, branches, a, b)
+
+
+def auto_report(a: jax.Array, b: jax.Array,
+                candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES):
+    """Debug/observability helper: which mode would AUTO pick and why."""
+    idx = int(select_mode_index(a, b, candidates))
+    mode = candidates[idx]
+    return {
+        "selected_mode": mode,
+        "mode_bits": mode.mode_bits,
+        "sig_limbs_a": int(limbs_lib.significant_limbs(a)),
+        "sig_limbs_b": int(limbs_lib.significant_limbs(b)),
+        "residual_a_1limb": float(limbs_lib.residual_scale(a, 1)),
+        "residual_b_1limb": float(limbs_lib.residual_scale(b, 1)),
+    }

@@ -1,0 +1,68 @@
+"""IEEE exception signals — the paper's Zero / Infinity / NaN / Denormal outputs.
+
+The FPGA raises four wires; the framework raises four boolean masks plus
+aggregate health counters that the fault-tolerant trainer consumes (a NaN
+blow-up triggers checkpoint rollback + optional precision escalation — the
+run-time reconfigurability doubling as a resilience mechanism).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ExceptionSignals(NamedTuple):
+    zero: jax.Array      # exactly ±0
+    infinity: jax.Array  # ±inf
+    nan: jax.Array       # NaN
+    denormal: jax.Array  # subnormal (biased exponent 0, significand != 0)
+
+
+def classify(x: jax.Array) -> ExceptionSignals:
+    """Bit-pattern classification, exactly as the paper specifies:
+    Zero:     exponent+bias == 0 and significand == 0
+    Infinity: exponent+bias == max and significand == 0
+    NaN:      exponent+bias == max and significand != 0
+    Denormal: exponent+bias == 0 and significand != 0
+    (Bit-level so XLA's flush-to-zero comparison semantics cannot hide
+    denormals.)"""
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    exp = (bits >> 23) & jnp.uint32(0xFF)
+    sig = bits & jnp.uint32(0x7FFFFF)
+    exp_zero = exp == 0
+    exp_max = exp == 0xFF
+    sig_zero = sig == 0
+    return ExceptionSignals(
+        zero=exp_zero & sig_zero,
+        infinity=exp_max & sig_zero,
+        nan=exp_max & ~sig_zero,
+        denormal=exp_zero & ~sig_zero,
+    )
+
+
+def exception_counts(x: jax.Array) -> Dict[str, jax.Array]:
+    s = classify(x)
+    return {
+        "zero": jnp.sum(s.zero),
+        "infinity": jnp.sum(s.infinity),
+        "nan": jnp.sum(s.nan),
+        "denormal": jnp.sum(s.denormal),
+    }
+
+
+def all_finite(tree) -> jax.Array:
+    """True iff every leaf of the pytree is finite (trainer health check)."""
+    leaves = [
+        jnp.all(jnp.isfinite(l))
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+    ]
+    if not leaves:
+        return jnp.array(True)
+    ok = leaves[0]
+    for l in leaves[1:]:
+        ok = jnp.logical_and(ok, l)
+    return ok

@@ -1,0 +1,149 @@
+"""bf16 limb decomposition — the TPU analogue of the paper's operand truncation.
+
+``decompose(x, k)`` splits an fp32 tensor into ``k`` bf16 limbs with
+``x ~= sum_i limbs[i]`` where limb ``i`` carries mantissa bits ``[8i, 8(i+1))``.
+Rounding the input to ``k`` limbs *is* the paper's "rounding of bits before
+multiplication": narrower operands -> fewer MXU passes.
+
+For >24-bit inputs (paper modes 5/6) fp32 cannot even *hold* the operand, so we
+support a two-float ("double-double", DD) operand representation ``(hi, lo)``
+with ``value = hi + lo`` giving ~49 usable mantissa bits.  ``decompose_dd``
+extracts up to 7 limbs from it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DD(NamedTuple):
+    """Two-float operand: value = hi + lo, |lo| <= ulp(hi)/2."""
+
+    hi: jax.Array  # fp32
+    lo: jax.Array  # fp32
+
+    @property
+    def shape(self):
+        return self.hi.shape
+
+    @property
+    def dtype(self):
+        return self.hi.dtype
+
+
+def dd_from_f64(x64: np.ndarray) -> DD:
+    """Split a float64 numpy array into a DD pair (host-side helper)."""
+    hi = x64.astype(np.float32)
+    lo = (x64 - hi.astype(np.float64)).astype(np.float32)
+    return DD(jnp.asarray(hi), jnp.asarray(lo))
+
+
+def dd_to_f64(d: DD) -> np.ndarray:
+    return np.asarray(d.hi, dtype=np.float64) + np.asarray(d.lo, dtype=np.float64)
+
+
+def decompose(x: jax.Array, n_limbs: int) -> jax.Array:
+    """fp32 -> stacked bf16 limbs, shape (n_limbs, *x.shape).
+
+    Limb extraction is the round-to-nearest truncation cascade:
+        l0 = bf16(x); l1 = bf16(x - l0); ...
+    Each subtraction is exact in fp32 (the high bits cancel), so the residual
+    after limb i is < 2^-8(i+1) relative.  fp32 holds < 25 mantissa bits, so
+    limbs beyond 3 are ~0 for fp32 inputs (use DD inputs for modes 5/6).
+    """
+    x = x.astype(jnp.float32)
+    limbs = []
+    r = x
+    for _ in range(n_limbs):
+        li = r.astype(jnp.bfloat16)
+        limbs.append(li)
+        r = r - li.astype(jnp.float32)
+    return jnp.stack(limbs)
+
+
+def decompose_dd(x: DD, n_limbs: int) -> jax.Array:
+    """DD -> stacked bf16 limbs, shape (n_limbs, *x.shape).
+
+    The low word is folded in once the high word's residual has decayed to its
+    magnitude (after 3 limbs ~ 2^-24 relative, matching |lo|).
+    """
+    limbs = []
+    r = x.hi.astype(jnp.float32)
+    for i in range(n_limbs):
+        li = r.astype(jnp.bfloat16)
+        limbs.append(li)
+        r = r - li.astype(jnp.float32)
+        if i == 2:  # residual of hi has decayed to lo's scale: fold lo in
+            r = r + x.lo.astype(jnp.float32)
+    return jnp.stack(limbs)
+
+
+def reconstruct(limbs: jax.Array) -> jax.Array:
+    """Sum limbs back to fp32 (ascending magnitude for accuracy)."""
+    acc = jnp.zeros(limbs.shape[1:], jnp.float32)
+    for i in range(limbs.shape[0] - 1, -1, -1):
+        acc = acc + limbs[i].astype(jnp.float32)
+    return acc
+
+
+def round_to_limbs(x: jax.Array, n_limbs: int) -> jax.Array:
+    """Round x to an 8*n_limbs-bit mantissa (the paper's pre-multiply rounding)."""
+    return reconstruct(decompose(x, n_limbs))
+
+
+def residual_scale(x: jax.Array, n_limbs: int) -> jax.Array:
+    """max|x - round_to_limbs(x)| / max|x| — the tensor-level analogue of the
+    paper's 'count zeros after the leading 1' operand analysis.
+
+    Returns a scalar fp32.  0 means the tensor is exactly representable in
+    ``n_limbs`` limbs (e.g. small integers in mode M8)."""
+    x = x.astype(jnp.float32)
+    r = x
+    for _ in range(n_limbs):
+        r = r - r.astype(jnp.bfloat16).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), jnp.finfo(jnp.float32).tiny)
+    return jnp.max(jnp.abs(r)) / scale
+
+
+def significant_limbs(
+    x: jax.Array, *, tol: float = 2.0**-13, max_limbs: int = 3
+) -> jax.Array:
+    """Number of limbs needed so the rounding residual is <= tol (relative).
+
+    This is the AUTO-mode operand analyzer: a tensor of small integers (or any
+    data with few significant mantissa bits — the paper's 'zeros after the
+    leading 1') needs 1 limb; generic fp32 data needs 3.
+
+    Returns an int32 scalar in [1, max_limbs]; traceable (jit/vmap-safe).
+    """
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), jnp.finfo(jnp.float32).tiny)
+    needed = jnp.int32(1)
+    r = x
+    for k in range(1, max_limbs):  # after k limbs, is the residual too big?
+        r = r - r.astype(jnp.bfloat16).astype(jnp.float32)
+        too_big = jnp.max(jnp.abs(r)) > tol * scale
+        # if the residual after k limbs is still too big, need at least k+1
+        needed = jnp.maximum(needed, jnp.where(too_big, jnp.int32(k + 1), 1))
+    return needed
+
+
+def neumaier_sum(terms: Sequence[jax.Array]) -> jax.Array:
+    """Compensated (Neumaier) summation of fp32 terms — the carry-save-adder
+    analogue: per-term rounding errors are captured in a compensation register
+    and applied once at the end."""
+    if len(terms) == 1:
+        return terms[0]
+    s = terms[0]
+    c = jnp.zeros_like(s)
+    for t in terms[1:]:
+        tmp = s + t
+        # branchless Neumaier: compensation picks the larger-magnitude operand
+        c = c + jnp.where(
+            jnp.abs(s) >= jnp.abs(t), (s - tmp) + t, (t - tmp) + s
+        )
+        s = tmp
+    return s + c

@@ -1,0 +1,156 @@
+"""Public multi-precision matmul op — the paper's reconfigurable multiplier as a
+composable JAX primitive.
+
+``mp_matmul(a, b, mode)`` is the single entry point every layer in the
+framework uses for dense contractions.  It is differentiable (custom VJP whose
+backward passes may run at a *different* mode — production mixed-precision
+recipes usually give wgrad/dgrad more bits than fwd), batched, and
+backend-switchable:
+
+  backend="ref"     pure-jnp limb matmuls (XLA fuses; used for dry-run/lowering)
+  backend="pallas"  fused Pallas kernel (TPU target; interpret=True on CPU)
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.limbs import DD
+from repro.core.modes import PrecisionMode, spec as mode_spec
+from repro.kernels import ref as ref_backend
+
+Operand = Union[jax.Array, DD]
+
+_DEFAULT_BACKEND = os.environ.get("REPRO_MP_BACKEND", "ref")
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("ref", "pallas", "pallas_interpret"), name
+    _DEFAULT_BACKEND = name
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def _run(a: Operand, b: Operand, mode: PrecisionMode, backend: str,
+         out_dtype) -> jax.Array:
+    if backend == "ref":
+        return ref_backend.mp_matmul_ref(a, b, mode, out_dtype=out_dtype)
+    # deferred import: kernels.ops imports pallas
+    from repro.kernels import ops as pallas_backend
+
+    interpret = backend == "pallas_interpret" or jax.default_backend() == "cpu"
+    return pallas_backend.mp_matmul_pallas(
+        a, b, mode, out_dtype=out_dtype, interpret=interpret
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _mp_matmul_diff(a, b, mode, bwd_mode, backend, out_dtype):
+    return _run(a, b, mode, backend, out_dtype)
+
+
+def _fwd(a, b, mode, bwd_mode, backend, out_dtype):
+    return _run(a, b, mode, backend, out_dtype), (a, b)
+
+
+def _bwd(mode, bwd_mode, backend, out_dtype, res, g):
+    a, b = res
+    bm = bwd_mode if bwd_mode is not None else mode
+    g = g.astype(jnp.float32)
+    # dA = g @ B^T  (dgrad);  dB = A^T @ g  (wgrad) — both at bwd_mode.
+    da = _run(g, jnp.swapaxes(b, -1, -2), bm, backend, jnp.float32)
+    if b.ndim == 2 and a.ndim > 2:
+        # weight grad: contract all token dims at once (sharding-preserving)
+        from repro.kernels import ref as _ref
+
+        db = _ref.mp_wgrad_ref(a, g, bm)
+    else:
+        db = _run(jnp.swapaxes(a, -1, -2), g, bm, backend, jnp.float32)
+        db = _unbroadcast(db, b.shape)
+    # reduce broadcast batch dims if matmul broadcasting was used
+    da = _unbroadcast(da, a.shape)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+_mp_matmul_diff.defvjp(_fwd, _bwd)
+
+
+def _unbroadcast(x: jax.Array, target_shape) -> jax.Array:
+    if x.shape == tuple(target_shape):
+        return x
+    # sum leading broadcast dims
+    extra = x.ndim - len(target_shape)
+    if extra > 0:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(
+        i for i, (xs, ts) in enumerate(zip(x.shape, target_shape)) if ts == 1 and xs != 1
+    )
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x
+
+
+def mp_matmul(
+    a: Operand,
+    b: Operand,
+    mode: PrecisionMode = PrecisionMode.M16,
+    *,
+    bwd_mode: Optional[PrecisionMode] = None,
+    backend: Optional[str] = None,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Multi-precision matmul: ``a @ b`` at the requested precision mode.
+
+    a: (..., M, K); b: (..., K, N); returns (..., M, N).
+    mode=AUTO dispatches on run-time operand analysis (paper mode 1) via
+    ``lax.switch`` — only the selected branch executes, the analogue of the
+    paper powering only the selected multiplier unit.
+    """
+    backend = backend or _DEFAULT_BACKEND
+    if mode == PrecisionMode.AUTO:
+        from repro.core import auto  # circular-import avoidance
+
+        return auto.mp_matmul_auto(
+            a, b, backend=backend, out_dtype=out_dtype, bwd_mode=bwd_mode
+        )
+    mode = PrecisionMode(mode)
+    if isinstance(a, DD) or isinstance(b, DD):
+        # DD operands: inference-only path (no VJP through two-float repr)
+        return _run(a, b, mode, backend, out_dtype)
+    return _mp_matmul_diff(a, b, mode, bwd_mode, backend, out_dtype)
+
+
+def mp_dense(
+    x: jax.Array,
+    w: jax.Array,
+    mode: PrecisionMode = PrecisionMode.M16,
+    *,
+    bwd_mode: Optional[PrecisionMode] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Dense layer contraction: x (..., K) @ w (K, N) -> (..., N).
+
+    NO flattening of the leading dims: a (B·S, K) reshape merges sharded
+    batch×seq dims and GSPMD silently drops the minor (seq) sharding, running
+    the layer at full sequence per device.  The ref backend contracts the
+    unflattened operand directly."""
+    return mp_matmul(x, w, mode, bwd_mode=bwd_mode, backend=backend)
+
+
+def mp_einsum_qk(
+    q: jax.Array, k: jax.Array, mode: PrecisionMode, **kw
+) -> jax.Array:
+    """Attention logits: q (..., S, D) @ k^T (..., T, D) -> (..., S, T)."""
+    return mp_matmul(q, jnp.swapaxes(k, -1, -2), mode, **kw)
+
+
+def mode_flops(mode: PrecisionMode, m: int, k: int, n: int) -> int:
+    """MXU MAC-FLOPs for one mp_matmul (the paper's 'area x time' cost axis)."""
+    return 2 * m * k * n * mode_spec(mode).n_products

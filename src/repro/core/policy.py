@@ -1,0 +1,101 @@
+"""Per-layer-class precision policy — how a *framework* consumes the paper's
+run-time modes.
+
+The paper reconfigures one multiplier per operation; a training framework has
+dozens of matmul sites with different sensitivity (router >> logits > ffn).
+``PrecisionPolicy`` assigns a mode to each op class, and every model layer
+resolves its matmuls through it, so an entire network's precision is
+reconfigured with one config object — at run time, without re-tracing when the
+policy is passed statically per step, or via AUTO per-op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.modes import PrecisionMode
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Mode per op class.  ``None`` bwd modes inherit the fwd mode."""
+
+    qkv: PrecisionMode = PrecisionMode.M16
+    attn_logits: PrecisionMode = PrecisionMode.M16
+    attn_out: PrecisionMode = PrecisionMode.M16
+    ffn: PrecisionMode = PrecisionMode.M16
+    moe_router: PrecisionMode = PrecisionMode.M23   # routing is precision-sensitive
+    moe_expert: PrecisionMode = PrecisionMode.M16
+    ssm: PrecisionMode = PrecisionMode.M16
+    lm_head: PrecisionMode = PrecisionMode.M23      # logits feed the loss
+    frontend: PrecisionMode = PrecisionMode.M16
+    bwd_dgrad: Optional[PrecisionMode] = None
+    bwd_wgrad: Optional[PrecisionMode] = None
+
+    def mode(self, op_class: str) -> PrecisionMode:
+        return getattr(self, op_class)
+
+    def bwd(self, op_class: str) -> Optional[PrecisionMode]:
+        # one bwd mode for all classes keeps the policy small; refine if needed
+        return self.bwd_dgrad
+
+    # ---- canonical recipes -------------------------------------------------
+    @classmethod
+    def train_default(cls) -> "PrecisionPolicy":
+        """The production recipe: 16-bit-mantissa fwd, fp32-grade reductions."""
+        return cls()
+
+    @classmethod
+    def train_fast(cls) -> "PrecisionPolicy":
+        """Paper mode 2 everywhere it is safe (max throughput)."""
+        return cls(
+            qkv=PrecisionMode.M8,
+            attn_logits=PrecisionMode.M16,
+            attn_out=PrecisionMode.M8,
+            ffn=PrecisionMode.M8,
+            moe_expert=PrecisionMode.M8,
+            ssm=PrecisionMode.M16,
+        )
+
+    @classmethod
+    def full_fp32(cls) -> "PrecisionPolicy":
+        """Paper mode 4 everywhere — the accuracy baseline."""
+        m = PrecisionMode.M23
+        return cls(
+            qkv=m, attn_logits=m, attn_out=m, ffn=m, moe_router=m,
+            moe_expert=m, ssm=m, lm_head=m, frontend=m,
+        )
+
+    @classmethod
+    def serve_default(cls) -> "PrecisionPolicy":
+        """Decode-optimized: single-pass bf16 with precise logits."""
+        return cls(
+            qkv=PrecisionMode.M8,
+            attn_logits=PrecisionMode.M16,
+            attn_out=PrecisionMode.M8,
+            ffn=PrecisionMode.M8,
+            moe_expert=PrecisionMode.M8,
+            lm_head=PrecisionMode.M16,
+        )
+
+    @classmethod
+    def auto(cls) -> "PrecisionPolicy":
+        """Paper mode 1 everywhere: per-op run-time operand analysis."""
+        a = PrecisionMode.AUTO
+        return cls(
+            qkv=a, attn_logits=a, attn_out=a, ffn=a,
+            moe_expert=a, ssm=a, frontend=a,
+        )
+
+
+POLICIES = {
+    "train_default": PrecisionPolicy.train_default,
+    "train_fast": PrecisionPolicy.train_fast,
+    "full_fp32": PrecisionPolicy.full_fp32,
+    "serve_default": PrecisionPolicy.serve_default,
+    "auto": PrecisionPolicy.auto,
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    return POLICIES[name]()

@@ -1,0 +1,257 @@
+"""Pallas TPU kernel: fused multi-precision limb matmul.
+
+This is the performance-critical realization of the paper's reconfigurable
+multiplier (DESIGN.md §2).  One kernel invocation performs *all* selected limb
+products for a (bm×bn) output tile while the A/B tiles sit in VMEM:
+
+    HBM traffic  = read A once + read B once + write C once   (mode-independent)
+    MXU passes   = n_products(mode)                            (mode-dependent)
+
+versus the naive realization (n_products separate XLA matmuls over
+pre-materialized limb arrays) which pays ``n_limbs×`` the HBM reads plus limb
+materialization round-trips.  The fusion is the beyond-paper optimization that
+makes low modes *memory*-cheap, not just FLOP-cheap (EXPERIMENTS.md §Perf).
+
+Layout/tiling rationale (TPU v5e):
+  * block sizes are multiples of (8, 128) fp32 tiles; MXU dims multiple of 128;
+  * the K grid axis is innermost and sequential ("arbitrary"), M/N parallel;
+  * per-order fp32 accumulators live in VMEM scratch across K steps — the
+    carry-save-adder analogue (no per-pass HBM round trip, no per-pass
+    re-rounding across orders);
+  * on-the-fly limb extraction is VPU elementwise work fused ahead of the MXU
+    passes — the paper's "truncate before multiply" costs zero extra HBM bytes.
+
+VMEM budget per grid step (defaults bm=bn=256, bk=512, mode M23):
+    A tile f32 512KB + B tile f32 512KB + limbs bf16 3*(256KB+256KB)
+    + acc 3*256KB ≈ 3.3 MB  « 16 MB/core.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.modes import ModeSpec, PrecisionMode, spec as mode_spec
+
+
+def _extract_limbs(x: jax.Array, n_limbs: int) -> list[jax.Array]:
+    """On-the-fly limb cascade (VPU): f32 tile -> n_limbs bf16 tiles."""
+    limbs = []
+    r = x
+    for i in range(n_limbs):
+        li = r.astype(jnp.bfloat16)
+        limbs.append(li)
+        if i + 1 < n_limbs:
+            r = r - li.astype(jnp.float32)
+    return limbs
+
+
+def _combine_orders(acc_ref, n_orders: int) -> jax.Array:
+    """Neumaier-compensated combine, smallest order-magnitude first."""
+    if n_orders == 1:
+        return acc_ref[0]
+    s = acc_ref[n_orders - 1]
+    c = jnp.zeros_like(s)
+    for o in range(n_orders - 2, -1, -1):
+        t = acc_ref[o]
+        tmp = s + t
+        c = c + jnp.where(jnp.abs(s) >= jnp.abs(t), (s - tmp) + t, (t - tmp) + s)
+        s = tmp
+    return s + c
+
+
+def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtype):
+    """Grid (Mi, Nj, Kk); A block (bm,bk) f32; B block (bk,bn) f32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    al = _extract_limbs(a, spec.n_limbs)
+    bl = _extract_limbs(b, spec.n_limbs)
+
+    # group kept products by order so each order's partial sum stays separate
+    for o in range(spec.max_order + 1):
+        terms = [
+            jnp.dot(al[i], bl[j], preferred_element_type=jnp.float32)
+            for (i, j) in spec.products
+            if i + j == o
+        ]
+        if not terms:
+            continue
+        tot = terms[0]
+        for t in terms[1:]:
+            tot = tot + t
+        acc_ref[o] += tot
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
+
+
+def _prelimbed_kernel(a_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtype):
+    """B pre-decomposed to (L, bk, bn) bf16 (static weights: serving path)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    al = _extract_limbs(a, spec.n_limbs)
+
+    for o in range(spec.max_order + 1):
+        terms = [
+            jnp.dot(al[i], bl_ref[j], preferred_element_type=jnp.float32)
+            for (i, j) in spec.products
+            if i + j == o
+        ]
+        if not terms:
+            continue
+        tot = terms[0]
+        for t in terms[1:]:
+            tot = tot + t
+        acc_ref[o] += tot
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
+
+
+def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec,
+                           out_dtype):
+    """Both operands pre-decomposed (DD / >fp32 inputs, modes 5-6)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    for o in range(spec.max_order + 1):
+        terms = [
+            jnp.dot(al_ref[i], bl_ref[j], preferred_element_type=jnp.float32)
+            for (i, j) in spec.products
+            if i + j == o
+        ]
+        if not terms:
+            continue
+        tot = terms[0]
+        for t in terms[1:]:
+            tot = tot + t
+        acc_ref[o] += tot
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
+
+
+def _compiler_params():
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except TypeError:  # API drift guard
+        return None
+
+
+def build_fused_call(
+    M: int, K: int, N: int,
+    mode: PrecisionMode,
+    *,
+    bm: int, bk: int, bn: int,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """pallas_call for the fused on-the-fly-limbs kernel (padded shapes)."""
+    s = mode_spec(mode)
+    n_orders = s.max_order + 1
+    cost = pl.CostEstimate(
+        flops=2 * M * K * N * s.n_products,
+        bytes_accessed=(M * K + K * N) * 4 + M * N * jnp.dtype(out_dtype).itemsize,
+        transcendentals=0,
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, spec=s, out_dtype=out_dtype),
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((n_orders, bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        cost_estimate=cost,
+        interpret=interpret,
+    )
+
+
+def build_prelimbed_call(
+    M: int, K: int, N: int,
+    mode: PrecisionMode,
+    *,
+    bm: int, bk: int, bn: int,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    both: bool = False,
+):
+    """pallas_call with B (and optionally A) pre-decomposed to bf16 limbs."""
+    s = mode_spec(mode)
+    n_orders = s.max_order + 1
+    L = s.n_limbs
+    if both:
+        kern = functools.partial(_both_prelimbed_kernel, spec=s, out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((L, bm, bk), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((L, bk, bn), lambda i, j, k: (0, k, j)),
+        ]
+    else:
+        kern = functools.partial(_prelimbed_kernel, spec=s, out_dtype=out_dtype)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((L, bk, bn), lambda i, j, k: (0, k, j)),
+        ]
+    return pl.pallas_call(
+        kern,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((n_orders, bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standalone limb-decompose kernel (pre-limbing weights once per step / at
+# model load for serving).  Elementwise; blocked over the last two dims.
+# ---------------------------------------------------------------------------
+def _decompose_kernel(x_ref, o_ref, *, n_limbs: int):
+    r = x_ref[...].astype(jnp.float32)
+    for i in range(n_limbs):
+        li = r.astype(jnp.bfloat16)
+        o_ref[i] = li
+        if i + 1 < n_limbs:
+            r = r - li.astype(jnp.float32)
+
+
+def build_decompose_call(
+    R: int, C: int, n_limbs: int, *, br: int, bc: int, interpret: bool = False
+):
+    return pl.pallas_call(
+        functools.partial(_decompose_kernel, n_limbs=n_limbs),
+        grid=(R // br, C // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((n_limbs, br, bc), lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_limbs, R, C), jnp.bfloat16),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )

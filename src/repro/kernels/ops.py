@@ -1,0 +1,174 @@
+"""jit'd wrappers around the Pallas multi-precision matmul kernels.
+
+Handles: shape padding to block multiples, leading-batch flattening/vmap,
+block-size selection, DD operands (pre-limbed path), and the CPU interpret
+switch so the same call sites run on TPU (compiled) and CPU (validated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import limbs as limbs_lib
+from repro.core.limbs import DD
+from repro.core.modes import PrecisionMode, spec as mode_spec
+from repro.kernels import mp_matmul as kern
+
+Operand = Union[jax.Array, DD]
+
+# default TPU-aligned tile sizes (fp32: multiples of (8,128); MXU: 128)
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_blocks(M: int, K: int, N: int,
+                 bm: Optional[int], bk: Optional[int], bn: Optional[int]
+                 ) -> Tuple[int, int, int]:
+    """Clamp default blocks to the (padded) problem, keeping TPU alignment."""
+    bm = bm or min(DEFAULT_BM, _round_up(M, 8))
+    bn = bn or min(DEFAULT_BN, _round_up(N, 128))
+    bk = bk or min(DEFAULT_BK, _round_up(K, 128))
+    return bm, bk, bn
+
+
+def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[-2], cols - x.shape[-1]
+    if pr == 0 and pc == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 2) + [(0, pr), (0, pc)]
+    return jnp.pad(x, pad)
+
+
+def _matmul2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
+              interpret: bool, bm, bk, bn) -> jax.Array:
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    bm, bk, bn = _pick_blocks(M, K, N, bm, bk, bn)
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    ap = _pad2(a, Mp, Kp)
+    bp = _pad2(b, Kp, Np)
+    call = kern.build_fused_call(
+        Mp, Kp, Np, mode, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    out = call(ap, bp)
+    return out[:M, :N]
+
+
+def _matmul2d_dd(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+                 interpret: bool, bm, bk, bn) -> jax.Array:
+    """DD-capable path: pre-limb both operands outside the kernel."""
+    s = mode_spec(mode)
+    al = (limbs_lib.decompose_dd(a, s.n_limbs) if isinstance(a, DD)
+          else limbs_lib.decompose(a, s.n_limbs))
+    bl = (limbs_lib.decompose_dd(b, s.n_limbs) if isinstance(b, DD)
+          else limbs_lib.decompose(b, s.n_limbs))
+    M, K = al.shape[1:]
+    K2, N = bl.shape[1:]
+    assert K == K2
+    bm, bk, bn = _pick_blocks(M, K, N, bm, bk, bn)
+    Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
+    al = jnp.pad(al, [(0, 0), (0, Mp - M), (0, Kp - K)])
+    bl = jnp.pad(bl, [(0, 0), (0, Kp - K), (0, Np - N)])
+    call = kern.build_prelimbed_call(
+        Mp, Kp, Np, mode, bm=bm, bk=bk, bn=bn, out_dtype=out_dtype,
+        interpret=interpret, both=True,
+    )
+    return call(al, bl)[:M, :N]
+
+
+def mp_matmul_pallas(
+    a: Operand,
+    b: Operand,
+    mode: PrecisionMode = PrecisionMode.M16,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> jax.Array:
+    """Pallas-backed mp_matmul: a (..., M, K) @ b (..., K, N) -> (..., M, N).
+
+    Leading batch dims are handled by flattening (when only ``a`` is batched,
+    the batch folds into M — one big matmul, best MXU utilization) or vmap
+    (when both are batched)."""
+    mode = PrecisionMode(mode)
+    if isinstance(a, DD) or isinstance(b, DD):
+        assert (a.hi.ndim if isinstance(a, DD) else a.ndim) == 2, (
+            "DD path supports 2D operands")
+        return _matmul2d_dd(a, b, mode, out_dtype, interpret, bm, bk, bn)
+
+    f = functools.partial(
+        _matmul2d, mode=mode, out_dtype=out_dtype, interpret=interpret,
+        bm=bm, bk=bk, bn=bn,
+    )
+    if a.ndim == 2 and b.ndim == 2:
+        return f(a, b)
+    if b.ndim == 2:
+        lead = a.shape[:-1]
+        out = f(a.reshape(-1, a.shape[-1]), b)
+        return out.reshape(lead + (b.shape[-1],))
+    # both batched: broadcast leading dims, then vmap the 2D kernel
+    lead = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a = jnp.broadcast_to(a, lead + a.shape[-2:]).reshape((-1,) + a.shape[-2:])
+    b = jnp.broadcast_to(b, lead + b.shape[-2:]).reshape((-1,) + b.shape[-2:])
+    out = jax.vmap(f)(a, b)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def mp_matmul_prelimbed_weights(
+    x: jax.Array,
+    w_limbs: jax.Array,
+    mode: PrecisionMode,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> jax.Array:
+    """Serving fast path: weights decomposed once (``decompose_weights``),
+    activations limbed on the fly inside the kernel.  x (..., K) @ W (K, N)."""
+    s = mode_spec(mode)
+    assert w_limbs.shape[0] >= s.n_limbs, "weight limbs < mode requirement"
+    w_limbs = w_limbs[: s.n_limbs]
+    lead = x.shape[:-1]
+    a = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    M, K = a.shape
+    _, K2, N = w_limbs.shape
+    assert K == K2
+    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    Mp, Kp, Np = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
+    a = _pad2(a, Mp, Kp)
+    w_limbs = jnp.pad(w_limbs, [(0, 0), (0, Kp - K), (0, Np - N)])
+    call = kern.build_prelimbed_call(
+        Mp, Kp, Np, mode, bm=bm_, bk=bk_, bn=bn_, out_dtype=out_dtype,
+        interpret=interpret, both=False,
+    )
+    out = call(a, w_limbs)[:M, :N]
+    return out.reshape(lead + (N,))
+
+
+def decompose_weights(
+    w: jax.Array, n_limbs: int, *, interpret: bool = False,
+    br: int = 256, bc: int = 256,
+) -> jax.Array:
+    """Pre-limb a weight matrix with the Pallas decompose kernel."""
+    R, C = w.shape
+    brc = min(br, _round_up(R, 8))
+    bcc = min(bc, _round_up(C, 128))
+    Rp, Cp = _round_up(R, brc), _round_up(C, bcc)
+    wp = _pad2(w.astype(jnp.float32), Rp, Cp)
+    call = kern.build_decompose_call(Rp, Cp, n_limbs, br=brc, bc=bcc,
+                                     interpret=interpret)
+    return call(wp)[:, :R, :C]

@@ -1,0 +1,156 @@
+"""Pure-jnp oracle for the multi-precision limb matmul.
+
+This is both (a) the correctness reference every Pallas kernel is allclose'd
+against and (b) the backend used for whole-model lowering (dry-run), where the
+HLO should reflect the real per-mode FLOP count (n_products bf16 matmuls).
+
+Semantics: C = A @ B computed as sum of kept limb products
+    C = sum_{(i,j) in spec.products} A_limb[i] @ B_limb[j]
+with per-order fp32 accumulators combined smallest-order-last via compensated
+summation (DESIGN.md §2: the carry-save-adder analogue).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as limbs_lib
+from repro.core.limbs import DD
+from repro.core.modes import ModeSpec, PrecisionMode, spec as mode_spec
+
+Operand = Union[jax.Array, DD]
+
+
+def _limbs_of(x: Operand, n_limbs: int) -> jax.Array:
+    if isinstance(x, DD):
+        return limbs_lib.decompose_dd(x, n_limbs)
+    if x.dtype == jnp.bfloat16:
+        # already a single-limb operand; higher limbs are zero
+        pad = jnp.zeros((n_limbs - 1,) + x.shape, jnp.bfloat16)
+        return jnp.concatenate([x[None], pad], axis=0) if n_limbs > 1 else x[None]
+    return limbs_lib.decompose(x, n_limbs)
+
+
+def mp_matmul_ref(
+    a: Operand,
+    b: Operand,
+    mode: PrecisionMode = PrecisionMode.M16,
+    *,
+    out_dtype: jnp.dtype = jnp.float32,
+    dim_numbers: Optional[str] = None,
+) -> jax.Array:
+    """Multi-precision matmul oracle.
+
+    a: (..., M, K), b: (..., K, N) with broadcastable leading batch dims
+    (jnp.matmul semantics).  Returns (..., M, N) in ``out_dtype``.
+    """
+    s = mode_spec(mode)
+
+    if s.n_limbs == 1:
+        # mode M8: plain bf16 matmul with fp32 accumulation — one MXU pass.
+        a1 = (a.hi if isinstance(a, DD) else a).astype(jnp.bfloat16)
+        b1 = (b.hi if isinstance(b, DD) else b).astype(jnp.bfloat16)
+        out = jnp.matmul(a1, b1, preferred_element_type=jnp.float32)
+        return out.astype(out_dtype)
+
+    al = _limbs_of(a, s.n_limbs)  # (L, ..., M, K) bf16
+    bl = _limbs_of(b, s.n_limbs)  # (L, ..., K, N) bf16
+
+    if s.n_limbs <= 3:
+        # separate limb-product matmuls, PLAIN adds between them.  Operands
+        # stay unflattened — a (B·S, K) reshape merges sharded batch×seq dims
+        # and GSPMD silently drops the minor (seq) sharding, running every
+        # dense layer at full sequence per device.  Plain adds (no Neumaier
+        # compare/select) keep the products fusable/reassociable by XLA.
+        out = None
+        for (i, j) in s.products:  # descending order: small terms first
+            p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+            out = p if out is None else out + p
+        return out.astype(out_dtype)
+
+    if s.n_limbs <= 3:
+        # batched case (attention einsums): separate products, plain sum
+        out = None
+        for (i, j) in s.products:  # descending order: small terms first
+            p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+            out = p if out is None else out + p
+        return out.astype(out_dtype)
+
+    # high modes (M36/M52): per-order fp32 accumulators, compensated combine
+    # (accuracy-critical; these modes are rare in production policies)
+    by_order: dict[int, list[jax.Array]] = {}
+    for (i, j) in s.products:
+        p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+        by_order.setdefault(i + j, []).append(p)
+
+    order_sums = []
+    for o in sorted(by_order, reverse=True):  # smallest magnitude first
+        terms = by_order[o]
+        acc = terms[0]
+        for t in terms[1:]:
+            acc = acc + t
+        order_sums.append(acc)
+
+    out = limbs_lib.neumaier_sum(order_sums)
+    return out.astype(out_dtype)
+
+
+def matmul_golden_f64(a, b) -> np.ndarray:
+    """Host-side float64 golden product (numpy) — the accuracy yardstick."""
+    a64 = (
+        limbs_lib.dd_to_f64(a) if isinstance(a, DD) else np.asarray(a, np.float64)
+    )
+    b64 = (
+        limbs_lib.dd_to_f64(b) if isinstance(b, DD) else np.asarray(b, np.float64)
+    )
+    return a64 @ b64
+
+
+def mp_wgrad_ref(
+    a: jax.Array,
+    g: jax.Array,
+    mode: PrecisionMode,
+    *,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Weight gradient a^T·g contracting ALL leading dims at once:
+    a (..., K), g (..., N) -> (K, N).
+
+    dot_general with multi-dim contraction keeps the (batch, seq) shardings
+    visible to GSPMD (local partial wgrad + one reduce over the token axes)
+    instead of flatten-then-matmul which gathers the sequence axis."""
+    s = mode_spec(mode)
+    lead = tuple(range(a.ndim - 1))
+    if s.n_limbs == 1:
+        return jax.lax.dot_general(
+            a.astype(jnp.bfloat16), g.astype(jnp.bfloat16),
+            ((lead, lead), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_dtype)
+    al = limbs_lib.decompose(a, s.n_limbs)
+    gl = limbs_lib.decompose(g.astype(jnp.float32), s.n_limbs)
+    a_sel = jnp.stack([al[i] for (i, j) in s.products])
+    g_sel = jnp.stack([gl[j] for (i, j) in s.products])
+    lead_p = tuple(range(a_sel.ndim - 1))  # (P, *lead)
+    out = jax.lax.dot_general(
+        a_sel, g_sel, ((lead_p, lead_p), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+def naive_multipass_ref(
+    a: jax.Array, b: jax.Array, mode: PrecisionMode
+) -> jax.Array:
+    """The *unoptimized* baseline the paper compares against (schoolbook):
+    all n_limbs^2 limb products, no order cut, naive left-to-right fp32 sum.
+    Used by benchmarks/table4_comparison.py."""
+    s = mode_spec(mode)
+    al = _limbs_of(a, s.n_limbs)
+    bl = _limbs_of(b, s.n_limbs)
+    out = jnp.zeros(a.shape[:-1] + b.shape[-1:], jnp.float32)
+    for i in range(s.n_limbs):
+        for j in range(s.n_limbs):
+            out = out + jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+    return out

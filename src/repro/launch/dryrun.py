@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on the production mesh with placeholder devices, and extract the
+memory / cost / collective artifacts the roofline analysis consumes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+        --shape train_4k --mesh single           # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both  # 40 cells
+
+Artifacts land in experiments/dryrun/<mesh>_<arch>_<shape>.json.
+Skipped cells (per-spec applicability) are recorded with their reason.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import roofline as rl
+from repro.configs.registry import assigned_archs, get_config
+from repro.configs.shapes import SHAPES, SHAPE_ORDER, applicability
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, *, policy_name: str = None,
+             tag: str = "") -> dict:
+    mesh_name = "multipod" if multi_pod else "singlepod"
+    cfg = get_config(arch)
+    ok, reason = applicability(cfg, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "skip", "reason": reason}
+    if not ok:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{mesh_name}_{arch}_{shape_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    policy = None
+    if policy_name:
+        from repro.core.policy import get_policy
+        policy = get_policy(policy_name)
+    cell = specs_lib.build_cell(arch, cfg, shape_name, mesh, policy=policy)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    scell = SHAPES[shape_name]
+    mf = rl.model_flops(cfg, scell.phase, scell.seq_len, scell.global_batch)
+    roof = rl.analyze(cost, mem, hlo, n_chips=n_chips, model_flops_global=mf)
+    from repro.analysis import hlo_parser
+    tot = hlo_parser.analyze_hlo(hlo)
+    coll = rl.CollectiveStats(total_bytes=int(tot.coll_bytes),
+                              by_kind={k: int(v) for k, v in
+                                       tot.coll_by_kind.items()},
+                              count=-1)
+
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "collectives": coll.to_dict(),
+        "roofline": roof.to_dict(),
+    })
+    if tag:
+        rec["tag"] = tag
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{mesh_name}_{arch}_{shape_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--tag", default="", help="artifact suffix for perf iters")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = assigned_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPE_ORDER if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for a in archs:
+            cfg = get_config(a)
+            for s in shapes:
+                ok, reason = applicability(cfg, s)
+                print(f"{a:24s} {s:12s} {'RUN' if ok else 'SKIP: ' + reason}")
+        return
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                mesh_name = "multipod" if mp else "singlepod"
+                try:
+                    rec = run_cell(a, s, mp, args.out,
+                                   policy_name=args.policy, tag=args.tag)
+                    if rec["status"] == "ok":
+                        r = rec["roofline"]
+                        print(f"OK   {mesh_name:9s} {a:24s} {s:12s} "
+                              f"compile={rec['compile_s']:6.1f}s "
+                              f"mem={rec['memory']['peak_bytes_est']/2**30:6.2f}GiB "
+                              f"bound={r['dominant']:10s} "
+                              f"t={r['bound_s']*1e3:8.2f}ms "
+                              f"mfu_bound={r['mfu_bound']:.3f}", flush=True)
+                    else:
+                        print(f"SKIP {mesh_name:9s} {a:24s} {s:12s} "
+                              f"({rec['reason']})", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mesh_name, a, s, repr(e)))
+                    print(f"FAIL {mesh_name:9s} {a:24s} {s:12s} {e!r}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         f"{[(m, a, s) for m, a, s, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips (data × model).
+Multi-pod:  2×16×16 = 512 chips (pod × data × model) — ``pod`` is the
+outermost data-parallel axis; gradient reduction across it is hierarchical
+(in-pod reduce-scatter → cross-pod all-reduce on shards → in-pod all-gather,
+inserted by XLA from the sharding; the explicit shard_map variant lives in
+dist/collectives.py).
+
+NOTE: functions, not module constants — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 4, pod: int = 0):
+    """Small mesh for CI-sized shard_map tests (8 fake host devices)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

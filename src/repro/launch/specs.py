@@ -1,0 +1,239 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape × phase) cell —
+weak-type-correct, sharded, zero device allocation.
+
+``build_cell`` returns everything the dry-run needs to lower one cell:
+the step callable and the sharded abstract inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import SHAPES, ShapeCell
+from repro.core.policy import PrecisionPolicy
+from repro.dist import sharding as sh_lib
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import trainer as trainer_lib
+
+
+def _sds(tree, shardings):
+    """Attach shardings to an abstract pytree -> ShapeDtypeStructs."""
+    return jax.tree_util.tree_map(
+        lambda leaf, s: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                             sharding=s),
+        tree, shardings)
+
+
+def _divisible_batch_axes(mesh: Mesh, B: int,
+                          include_model: bool = False) -> Tuple[str, ...]:
+    """Largest prefix of the data-parallel axis group that divides B.
+    include_model: allow absorbing the model axis into batch (FSDP-only
+    layout — pure 2D/3D data parallelism)."""
+    cand = [a for a in ("pod", "data") if a in mesh.axis_names]
+    if include_model:
+        cand.append("model")
+    axes = []
+    prod = 1
+    for a in cand:
+        if B % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if axes else ()
+
+
+def needs_tp(cfg: ModelConfig) -> bool:
+    """Layout decision: tensor parallelism only pays when the weights are so
+    large that FSDP-only cannot hold params+optimizer+one gathered layer per
+    chip (napkin math in EXPERIMENTS.md §Perf it.4: a 34B model FSDP-only
+    needs ~1.6 GB/chip sharded + ~2.2 GB transient gather — fits easily;
+    123B/236B do not).  Threshold: >60B parameters.
+    REPRO_FORCE_LAYOUT=fsdp|tp overrides (perf experiments)."""
+    import os
+    force = os.environ.get("REPRO_FORCE_LAYOUT", "")
+    if force == "fsdp":
+        return False
+    if force == "tp":
+        return True
+    return cfg.param_count() > 60e9
+
+
+def make_rules(mesh: Mesh, cell: ShapeCell, cfg: ModelConfig) -> sh_lib.AxisRules:
+    """Per-(arch × cell) layout:
+      TP archs (>30B / d_model>=7000):  batch (pod,data) + TP + Megatron-SP.
+      FSDP archs, batch divisible:      pure data parallelism over
+                                        (pod,data,model) — no TP collectives.
+      FSDP archs, small batch:          batch (pod,data) + seq over model
+                                        (Ulysses attention resharding).
+    """
+    B = cell.global_batch
+    tp = needs_tp(cfg)
+    seq_axes: Tuple[str, ...] = ()
+    if tp:
+        batch_axes = _divisible_batch_axes(mesh, B)
+        if cell.phase in ("train", "prefill"):
+            seq_axes = ("model",)      # Megatron-style sequence parallelism
+    else:
+        batch_axes = _divisible_batch_axes(
+            mesh, B, include_model=cell.phase in ("train", "prefill"))
+        if (cell.phase in ("train", "prefill")
+                and "model" not in batch_axes):
+            seq_axes = ("model",)      # Ulysses: seq<->heads resharding
+    return sh_lib.AxisRules(mesh=mesh, batch_axes=batch_axes or (None,),
+                            model_axis="model", seq_axes=seq_axes,
+                            tp_enabled=tp)
+
+
+def _cache_seq_axes(mesh: Mesh, cell: ShapeCell, rules) -> Any:
+    """Cache sequence sharding: model axis normally; batch=1 long-context
+    re-purposes every idle axis for context parallelism."""
+    if cell.global_batch == 1:
+        axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+        return axes
+    return "model"
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    phase: str
+    fn: Callable
+    args: tuple
+    donate: tuple = ()
+
+
+def batch_structs(cfg: ModelConfig, cell: ShapeCell, rules) -> Dict[str, Any]:
+    B, S = cell.global_batch, cell.seq_len
+    bspec = rules.batch if rules.batch_axes != (None,) else None
+    mkb = lambda shape, dt, spec: jax.ShapeDtypeStruct(
+        shape, dt, sharding=NamedSharding(rules.mesh, spec))
+    out = {}
+    if cfg.family == "audio":
+        out["embeds"] = mkb((B, S, cfg.d_model), jnp.float32,
+                            P(bspec, None, None))
+    elif cfg.family == "vlm":
+        out["tokens"] = mkb((B, S - cfg.n_patches), jnp.int32, P(bspec, None))
+        out["patch_embeds"] = mkb((B, cfg.n_patches, cfg.d_model),
+                                  jnp.float32, P(bspec, None, None))
+    else:
+        out["tokens"] = mkb((B, S), jnp.int32, P(bspec, None))
+    return out
+
+
+def label_struct(cfg: ModelConfig, cell: ShapeCell, rules):
+    B, S = cell.global_batch, cell.seq_len
+    bspec = rules.batch if rules.batch_axes != (None,) else None
+    S_lab = S - cfg.n_patches if cfg.family == "vlm" else S
+    return jax.ShapeDtypeStruct((B, S_lab), jnp.int32,
+                                sharding=NamedSharding(rules.mesh,
+                                                       P(bspec, None)))
+
+
+def params_structs(cfg: ModelConfig, rules):
+    abstract = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    shardings = sh_lib.param_shardings(abstract, rules)
+    return _sds(abstract, shardings)
+
+
+def state_structs(cfg: ModelConfig, rules, moment_dtype: str):
+    params_abs = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    ocfg = adamw.AdamWConfig(moment_dtype=moment_dtype)
+    state_abs = jax.eval_shape(
+        lambda p: trainer_lib.TrainState(p, adamw.init(p, ocfg)),
+        params_abs)
+    p_shard = sh_lib.param_shardings(params_abs, rules)
+    repl = NamedSharding(rules.mesh, P())
+    state_shard = trainer_lib.TrainState(
+        params=p_shard,
+        opt=adamw.AdamWState(step=repl, m=p_shard, v=p_shard))
+    return _sds(state_abs, state_shard), ocfg
+
+
+def cache_structs(cfg: ModelConfig, cell: ShapeCell, rules,
+                  dtype=jnp.bfloat16):
+    abstract = jax.eval_shape(
+        lambda: T.make_cache(cfg, cell.global_batch, cell.seq_len,
+                             dtype=dtype))
+    seq = _cache_seq_axes(rules.mesh, cell, rules)
+    bspec = rules.batch if rules.batch_axes != (None,) else None
+
+    def _spec_tree():
+        base = sh_lib.cache_specs(abstract, rules, seq_axes=seq)
+        # batch-replicated long-context: strip the batch axis entry
+        return base
+
+    specs = _spec_tree()
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(rules.mesh, s), specs)
+    return _sds(abstract, shardings)
+
+
+def build_cell(arch: str, cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               policy: Optional[PrecisionPolicy] = None) -> Cell:
+    cell = SHAPES[shape_name]
+    rules = make_rules(mesh, cell, cfg)
+    policy = policy or PrecisionPolicy.train_default()
+
+    if cell.phase == "train":
+        moment_dtype = ("bfloat16" if cfg.param_count() > 5e10 else "float32")
+        state_st, ocfg = state_structs(cfg, rules, moment_dtype)
+        tcfg = trainer_lib.TrainerConfig(opt=ocfg)
+        step = trainer_lib.make_train_step(cfg, policy, tcfg, mesh=mesh)
+        batch = batch_structs(cfg, cell, rules)
+        batch["labels"] = label_struct(cfg, cell, rules)
+
+        def fn(state, batch):
+            with sh_lib.use_rules(rules):
+                return step(state, batch)
+
+        return Cell(arch, shape_name, "train", fn, (state_st, batch),
+                    donate=(0,))
+
+    if cell.phase == "prefill":
+        params_st = params_structs(cfg, rules)
+        inputs = batch_structs(cfg, cell, rules)
+        if cfg.encoder_only:
+            def fn(params, inputs):
+                with sh_lib.use_rules(rules):
+                    logits, _, _ = T.forward(params, inputs, cfg, policy,
+                                             mesh=mesh)
+                    return logits[:, -1:, :]
+
+            return Cell(arch, shape_name, "prefill", fn, (params_st, inputs))
+        cache_st = cache_structs(cfg, cell, rules)
+        pre = trainer_lib.make_prefill_step(cfg, policy, mesh=mesh)
+
+        def fn(params, inputs, cache):
+            with sh_lib.use_rules(rules):
+                return pre(params, inputs, cache)
+
+        return Cell(arch, shape_name, "prefill", fn,
+                    (params_st, inputs, cache_st), donate=(2,))
+
+    # decode
+    serve_policy = policy if policy is not None else \
+        PrecisionPolicy.serve_default()
+    params_st = params_structs(cfg, rules)
+    cache_st = cache_structs(cfg, cell, rules)
+    B = cell.global_batch
+    bspec = rules.batch if rules.batch_axes != (None,) else None
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                               sharding=NamedSharding(rules.mesh,
+                                                      P(bspec, None)))
+    srv = trainer_lib.make_serve_step(cfg, serve_policy, mesh=mesh)
+
+    def fn(params, cache, tokens):
+        with sh_lib.use_rules(rules):
+            return srv(params, cache, tokens)
+
+    return Cell(arch, shape_name, "decode", fn, (params_st, cache_st, tok),
+                donate=(1,))

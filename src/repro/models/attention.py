@@ -1,0 +1,267 @@
+"""GQA / MHA attention: chunked flash-style training kernel (pure JAX, online
+softmax — memory O(q_chunk × kv_chunk) instead of O(S²)), KV-cache decode, and
+encoder (bidirectional) mode.
+
+All projections and both attention einsums run through mp_matmul, so the whole
+attention block obeys the run-time precision policy (paper modes per op class).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.policy import PrecisionPolicy
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_max, Hkv, Dh)
+    v: jax.Array        # (B, S_max, Hkv, Dh)
+    length: jax.Array   # scalar int32: valid prefix length
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    causal: bool = True
+
+
+def init_attn_params(key, dims: AttnDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d, h, hk, dh = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(ks[0], d, h * dh, dtype),
+        "wk": dense_init(ks[1], d, hk * dh, dtype),
+        "wv": dense_init(ks[2], d, hk * dh, dtype),
+        "wo": dense_init(ks[3], h * dh, d, dtype),
+    }
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, Dh) -> (B, S, Hkv*n_rep, Dh) — GQA head sharing."""
+    if n_rep == 1:
+        return x
+    b, s, hk, dh = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, hk, n_rep, dh)
+                            ).reshape(b, s, hk * n_rep, dh)
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, S, H, Dh)
+    k: jax.Array,            # (B, T, H, Dh)
+    v: jax.Array,            # (B, T, H, Dh)
+    policy: PrecisionPolicy,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash-style attention: scan over query chunks; inner scan over kv chunks
+    with running (max, denom, accum).  Peak memory O(q_chunk × kv_chunk) per
+    head instead of O(S·T) — mandatory for the 32k-seq cells."""
+    from repro.dist import sharding as _sh
+
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    nq = max(1, S // q_chunk)
+    nk = max(1, T // kv_chunk)
+
+    # parallelization strategy over the model axis:
+    #   heads divisible  -> Ulysses (seq<->heads all-to-all), serial q-chunks
+    #   heads indivisible-> sequence-parallel q chunks: the q-chunk dim is
+    #                       sharded over model and chunks run under vmap
+    #                       (k/v replicated across model for the inner scan)
+    rules = _sh.current_rules()
+    m_size = (rules.mesh.shape.get(rules.model_axis, 1)
+              if rules is not None else 1)
+    want_model_parallel = (
+        rules is not None and rules.seq_axes and S > 1
+        and rules.model_axis not in rules.batch_axes)
+    heads_mode = want_model_parallel and H % m_size == 0
+    if (want_model_parallel and not heads_mode and nq % m_size != 0
+            and S % m_size == 0):
+        # adaptive chunking: make the q-chunk count a multiple of the model
+        # axis so the chunk dim can shard (e.g. S=4096, m=16: nq 4 -> 16)
+        nq = m_size * max(1, nq // m_size)
+    seq_mode = (want_model_parallel and not heads_mode and nq % m_size == 0
+                and S % nq == 0)
+
+    if heads_mode:
+        q = _sh.constrain(q, "attn_heads")
+        k = _sh.constrain(k, "attn_heads")
+        v = _sh.constrain(v, "attn_heads")
+    scale = 1.0 / jnp.sqrt(Dh)
+    assert S % nq == 0 and T % nk == 0, (S, T, q_chunk, kv_chunk)
+    qc, kc = S // nq, T // nk
+
+    mode_l = policy.mode("attn_logits")
+    mode_o = policy.mode("attn_out")
+    bwd = policy.bwd("attn_logits")
+
+    # (B, S, H, Dh) -> (nq, B, H, qc, Dh)
+    qr = q.reshape(B, nq, qc, H, Dh).transpose(1, 0, 3, 2, 4) * scale
+    kr = k.reshape(B, nk, kc, H, Dh).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kc, H, Dh).transpose(1, 0, 3, 2, 4)
+
+    q_pos = q_offset + jnp.arange(S).reshape(nq, qc)
+    k_pos = jnp.arange(T).reshape(nk, kc)
+
+    def per_q_chunk(qi, q_blk):
+        def per_kv_chunk(carry, inp):
+            m_run, d_run, acc = carry
+            ki, k_blk, v_blk = inp
+            logits = mp_matmul(
+                q_blk, jnp.swapaxes(k_blk, -1, -2), mode_l, bwd_mode=bwd
+            )  # (B, H, qc, kc)
+            if causal:
+                mask = q_pos[qi][:, None] >= k_pos[ki][None, :]
+                logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            d_new = d_run * alpha + jnp.sum(p, axis=-1)
+            pv = mp_matmul(p.astype(jnp.float32), v_blk, mode_o, bwd_mode=bwd)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, d_new, acc), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, Dh), jnp.float32)
+        (m, d, acc), _ = jax.lax.scan(
+            per_kv_chunk, (m0, d0, a0),
+            (jnp.arange(nk), kr, vr),
+        )
+        return acc / jnp.maximum(d[..., None], 1e-30)
+
+    if seq_mode:
+        # shard the chunk dim over the model axis and vmap: each device runs
+        # its own nq/m chunks in parallel; the inner kv scan stays serial
+        # (memory-bounded), k/v are replicated across model by GSPMD.
+        qr = jax.lax.with_sharding_constraint(
+            qr, rules.sharding(rules.model_axis, rules.batch,
+                               None, None, None))
+        out = jax.vmap(per_q_chunk)(jnp.arange(nq), qr)
+        out = jax.lax.with_sharding_constraint(
+            out, rules.sharding(rules.model_axis, rules.batch,
+                                None, None, None))
+    else:
+        out = jax.lax.map(lambda args: per_q_chunk(*args),
+                          (jnp.arange(nq), qr))
+    # (nq, B, H, qc, Dh) -> (B, S, H, Dh)
+    return out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh)
+
+
+def gqa_forward(
+    params: dict,
+    x: jax.Array,            # (B, S, D)
+    dims: AttnDims,
+    policy: PrecisionPolicy,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Full attention block.  Training/prefill when cache is None or S>1;
+    single-token decode updates the cache in place (dynamic_update_slice)."""
+    B, S, D = x.shape
+    h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    mode_qkv = policy.mode("qkv")
+    bwd = policy.bwd("qkv")
+
+    q = mp_dense(x, params["wq"], mode_qkv, bwd_mode=bwd).reshape(B, S, h, dh)
+    k = mp_dense(x, params["wk"], mode_qkv, bwd_mode=bwd).reshape(B, S, hk, dh)
+    v = mp_dense(x, params["wv"], mode_qkv, bwd_mode=bwd).reshape(B, S, hk, dh)
+
+    if positions is None:
+        if cache is not None:
+            positions = cache.length + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+
+    if dims.rope_theta > 0:
+        q = apply_rope(q, positions, dims.rope_theta, dims.rope_fraction)
+        k = apply_rope(k, positions, dims.rope_theta, dims.rope_fraction)
+
+    new_cache = None
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                                 cache.length, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                                 cache.length, axis=1)
+        new_cache = KVCache(kc, vc, cache.length + S)
+        if S == 1:
+            out = _decode_attention(q, kc, vc, new_cache.length, dims, policy)
+        else:  # prefill into an empty cache: attend over the written prefix
+            kk = _repeat_kv(k, h // hk)
+            vv = _repeat_kv(v, h // hk)
+            out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+    else:
+        kk = _repeat_kv(k, h // hk)
+        vv = _repeat_kv(v, h // hk)
+        out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    if S > 1:
+        from repro.dist import sharding as _sh2
+        out = _sh2.constrain(out, "attn_out_seq")
+    out = out.reshape(B, S, h * dh)
+    out = mp_dense(out, params["wo"], policy.mode("attn_out"),
+                   bwd_mode=policy.bwd("attn_out"))
+    return out, new_cache
+
+
+def _decode_attention(q, k_cache, v_cache, length, dims: AttnDims,
+                      policy: PrecisionPolicy) -> jax.Array:
+    """One-token attention against the cache.  Written as plain einsums so
+    GSPMD can shard the cache sequence dim across the model axis and insert
+    the partial-softmax collectives automatically (sequence-parallel decode).
+    """
+    from repro.dist import sharding as _sh
+
+    B, S1, h, dh = q.shape  # S1 == 1
+    hk = dims.n_kv_heads
+    n_rep = h // hk
+    scale = 1.0 / jnp.sqrt(dh)
+    T = k_cache.shape[1]
+
+    rules = _sh.current_rules()
+    if rules is not None:
+        m = rules.mesh.shape.get(rules.model_axis, 1)
+        if h % m == 0 and hk % m == 0:
+            # head-parallel decode: q heads follow the cache's head sharding
+            # so attention is local per shard (no per-layer cache gather)
+            q = jax.lax.with_sharding_constraint(
+                q, rules.sharding(rules.batch, None, rules.model_axis, None))
+
+    kk = _repeat_kv(k_cache.astype(jnp.float32), n_rep)  # (B, T, H, Dh)
+    vv = _repeat_kv(v_cache.astype(jnp.float32), n_rep)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kk) * scale
+    mask = (jnp.arange(T)[None, None, None, :] < length)
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vv)
+    return out.astype(q.dtype)
+
+
+def make_kv_cache(batch: int, max_seq: int, dims: AttnDims,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_seq, dims.n_kv_heads, dims.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

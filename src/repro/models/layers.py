@@ -1,0 +1,93 @@
+"""Shared layer primitives.  Every dense contraction routes through the
+multi-precision matmul so the whole network obeys one PrecisionPolicy."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mpmatmul import mp_dense
+from repro.core.policy import PrecisionPolicy
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * weight + bias).astype(dt)
+
+
+def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array, policy: PrecisionPolicy,
+               op_class: str = "ffn") -> jax.Array:
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    mode = policy.mode(op_class)
+    bwd = policy.bwd(op_class)
+    g = mp_dense(x, w_gate, mode, bwd_mode=bwd)
+    u = mp_dense(x, w_up, mode, bwd_mode=bwd)
+    h = jax.nn.silu(g) * u
+    return mp_dense(h, w_down, mode, bwd_mode=bwd)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Token embedding lookup (gather; sharding-friendly on the D dim)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, w_head: jax.Array, policy: PrecisionPolicy) -> jax.Array:
+    """LM head: (..., D) @ (D, V) at the logits mode (precision-sensitive)."""
+    return mp_dense(x, w_head, policy.mode("lm_head"), bwd_mode=policy.bwd("lm_head"))
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding on the leading ``fraction`` of the head dim.
+
+    x: (B, S, H, Dh); positions: (B, S).  fraction=0.5 gives ChatGLM's
+    2D-RoPE layout (first half rotary, second half pass-through)."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    freqs = rope_frequencies(rot, theta)                       # (rot/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (B, S, 1, rot/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1, r2], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < dh else out
+
+
+def apply_rope_interleaved(x: jax.Array, positions: jax.Array,
+                           theta: float = 10000.0) -> jax.Array:
+    """DeepSeek-MLA style rope over the dedicated rope dims (full dim)."""
+    return apply_rope(x, positions, theta, fraction=1.0)
+
+
+# --------------------------------------------------------------- init utils
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> jax.Array:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

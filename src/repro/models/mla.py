@@ -1,0 +1,185 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434) with the
+compressed-latent KV cache and weight-absorbed decode path.
+
+Training/prefill: standard up-projected attention (latent -> per-head K/V).
+Decode: the cache stores only ``c_kv`` (kv_lora dims) + shared ``k_rope``
+(qk_rope dims) per token — 576 floats/token for DeepSeek-V2 instead of
+2·H·Dh — and the K up-projection is *absorbed* into the query so attention
+runs directly in latent space (the serving optimization from the paper).
+
+All projections route through mp_matmul (the framework's reconfigurable
+multiplier), making MLA the flagship consumer of the precision modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.policy import PrecisionPolicy
+from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.layers import apply_rope, dense_init
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array     # (B, S_max, kv_lora)
+    k_rope: jax.Array   # (B, S_max, qk_rope)
+    length: jax.Array   # scalar int32
+
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    kv_lora: int           # latent width (512 for DeepSeek-V2)
+    q_lora: int = 0        # 0 = no query compression
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def init_mla_params(key, dims: MLADims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d, h = dims.d_model, dims.n_heads
+    p = {
+        # KV path: down to latent, up to per-head K(nope)/V
+        "w_dkv": dense_init(ks[0], d, dims.kv_lora, dtype),
+        "w_uk": dense_init(ks[1], dims.kv_lora, h * dims.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[2], dims.kv_lora, h * dims.v_head_dim, dtype),
+        # decoupled shared rope key (one per token, shared across heads)
+        "w_kr": dense_init(ks[3], d, dims.qk_rope_dim, dtype),
+        "w_o": dense_init(ks[4], h * dims.v_head_dim, d, dtype),
+    }
+    if dims.q_lora > 0:
+        p["w_dq"] = dense_init(ks[5], d, dims.q_lora, dtype)
+        p["w_uq"] = dense_init(ks[6], dims.q_lora, h * dims.qk_head_dim, dtype)
+    else:
+        p["w_q"] = dense_init(ks[7], d, h * dims.qk_head_dim, dtype)
+    return p
+
+
+def _queries(params, x, dims: MLADims, policy: PrecisionPolicy):
+    B, S, _ = x.shape
+    mode, bwd = policy.mode("qkv"), policy.bwd("qkv")
+    if dims.q_lora > 0:
+        cq = mp_dense(x, params["w_dq"], mode, bwd_mode=bwd)
+        q = mp_dense(cq, params["w_uq"], mode, bwd_mode=bwd)
+    else:
+        q = mp_dense(x, params["w_q"], mode, bwd_mode=bwd)
+    q = q.reshape(B, S, dims.n_heads, dims.qk_head_dim)
+    return q[..., : dims.qk_nope_dim], q[..., dims.qk_nope_dim:]
+
+
+def mla_forward(
+    params: dict,
+    x: jax.Array,
+    dims: MLADims,
+    policy: PrecisionPolicy,
+    *,
+    positions: Optional[jax.Array] = None,
+    cache: Optional[MLACache] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[MLACache]]:
+    B, S, _ = x.shape
+    h = dims.n_heads
+    mode, bwd = policy.mode("qkv"), policy.bwd("qkv")
+
+    if positions is None:
+        base = cache.length if cache is not None else 0
+        positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
+
+    q_nope, q_rope = _queries(params, x, dims, policy)
+    q_rope = apply_rope(q_rope, positions, dims.rope_theta)
+
+    c_kv = mp_dense(x, params["w_dkv"], mode, bwd_mode=bwd)      # (B,S,lora)
+    k_rope = mp_dense(x, params["w_kr"], mode, bwd_mode=bwd)     # (B,S,rope)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        dims.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), cache.length, axis=1)
+        krc = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), cache.length, axis=1)
+        new_cache = MLACache(ckv, krc, cache.length + S)
+        if S == 1:
+            out = _absorbed_decode(params, q_nope, q_rope, ckv, krc,
+                                   new_cache.length, dims, policy)
+            out = mp_dense(out.reshape(B, S, h * dims.v_head_dim), params["w_o"],
+                           policy.mode("attn_out"), bwd_mode=policy.bwd("attn_out"))
+            return out, new_cache
+
+    # train / prefill: up-project latent to per-head K, V (unabsorbed)
+    k_nope = mp_dense(c_kv, params["w_uk"], mode, bwd_mode=bwd
+                      ).reshape(B, S, h, dims.qk_nope_dim)
+    v = mp_dense(c_kv, params["w_uv"], mode, bwd_mode=bwd
+                 ).reshape(B, S, h, dims.v_head_dim)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, h, dims.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # pad V's head dim up to the QK head dim so one attention kernel serves
+    # both (values ignore the pad after the contraction)
+    pad = dims.qk_head_dim - dims.v_head_dim
+    v_p = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, pad)]) if pad > 0 else v
+    out = chunked_attention(q, k, v_p, policy, causal=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out[..., : dims.v_head_dim]
+    if S > 1:
+        from repro.dist import sharding as _sh
+        out = _sh.constrain(out, "attn_out_seq")
+    out = out.reshape(B, S, h * dims.v_head_dim)
+    out = mp_dense(out, params["w_o"], policy.mode("attn_out"),
+                   bwd_mode=policy.bwd("attn_out"))
+    return out, new_cache
+
+
+def _absorbed_decode(params, q_nope, q_rope, c_kv, k_rope, length,
+                     dims: MLADims, policy: PrecisionPolicy) -> jax.Array:
+    """Weight-absorbed single-token decode in latent space.
+
+    q_lat[h] = q_nope[h] @ W_uk[h]^T  (absorb K up-proj into the query)
+    logits   = q_lat · c_kv + q_rope · k_rope       (T × kv_lora cache only)
+    out[h]   = (p @ c_kv) @ W_uv[h]                 (absorb V up-proj after)
+    """
+    B, S1, h, dn = q_nope.shape
+    lora, dr, dv = dims.kv_lora, dims.qk_rope_dim, dims.v_head_dim
+    mode = policy.mode("attn_logits")
+    w_uk = params["w_uk"].reshape(lora, h, dn)            # (lora, H, dn)
+    # q_lat: absorb — (B,1,H,dn) x (lora,H,dn) -> (B,H,lora)
+    q_lat = jnp.einsum("bshd,lhd->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(dn + dr)
+    T = c_kv.shape[1]
+    ckv = c_kv.astype(jnp.float32)
+    krp = k_rope.astype(jnp.float32)
+    logits = (jnp.einsum("bhl,btl->bht", q_lat, ckv)
+              + jnp.einsum("bshd,btd->bht", q_rope.astype(jnp.float32), krp)
+              ) * scale
+    mask = jnp.arange(T)[None, None, :] < length
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bht,btl->bhl", p, ckv)              # (B, H, lora)
+    w_uv = params["w_uv"].reshape(lora, h, dv)
+    out = jnp.einsum("bhl,lhd->bhd", ctx, w_uv.astype(jnp.float32))
+    del mode  # absorbed einsums run fp32: latent-space is precision-critical
+    return out[:, None, :, :].reshape(B, 1, h, dv)
+
+
+def make_mla_cache(batch: int, max_seq: int, dims: MLADims,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_seq, dims.kv_lora), dtype),
+        k_rope=jnp.zeros((batch, max_seq, dims.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

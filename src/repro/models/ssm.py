@@ -1,0 +1,284 @@
+"""Mamba2 mixer via SSD (state-space duality, arXiv:2405.21060 §6).
+
+The SSD chunked algorithm decomposes the selective-scan into block terms:
+  * intra-chunk: a (masked, decay-weighted) quadratic attention-like product
+    — batched matmuls, routed through mp_matmul (policy class "ssm");
+  * inter-chunk: per-chunk states passed through a short sequential scan
+    (element-wise decay recurrence — fp32, outside the multiplier, as the
+    paper's technique applies to multiplies, not the recurrence; DESIGN.md
+    §Arch-applicability).
+
+Decode keeps a recurrent cache: conv window (d_conv-1 samples) + SSM state
+(B, H, dh, ds) — O(1) per token, which is why the ``long_500k`` cell runs on
+this family only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.policy import PrecisionPolicy
+from repro.models.layers import dense_init, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        # z (d_inner) + xBC (conv_dim) + dt (n_heads)
+        return self.d_inner + self.conv_dim + self.n_heads
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_dim) rolling window
+    state: jax.Array  # (B, H, dh, ds)
+    length: jax.Array
+
+
+def init_ssm_params(key, dims: SSMDims, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    H = dims.n_heads
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32)
+                 * (jnp.log(dims.dt_max) - jnp.log(dims.dt_min))
+                 + jnp.log(dims.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], dims.d_model, dims.in_proj_dim, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dims.d_conv, dims.conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dims.conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "norm_w": jnp.ones((dims.d_inner,), dtype),
+        "out_proj": dense_init(ks[3], dims.d_inner, dims.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_window: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d via shifted adds (d_conv is tiny).
+    x: (B, S, C); w: (K, C).  init_window: (B, K-1, C) decode carry-in."""
+    K = w.shape[0]
+    if init_window is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k: k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    return out + b.astype(jnp.float32)
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, dims: SSMDims, policy: PrecisionPolicy,
+                 init_state: Optional[jax.Array] = None):
+    """SSD over chunks.
+    xh: (B, S, H, dh); dt: (B, S, H); A: (H,) negative;
+    Bm/Cm: (B, S, G, ds).  Returns (y (B,S,H,dh), final_state (B,H,dh,ds))."""
+    Bsz, S, H, dh = xh.shape
+    G, ds = Bm.shape[2], Bm.shape[3]
+    hpg = H // G                                      # heads per group
+    cl = min(dims.chunk, S)
+    S_orig = S
+    if S % cl:  # pad to a chunk multiple; zero x/B/C contribute nothing
+        pad = cl - S % cl
+        xh = jnp.pad(xh, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        dt = jnp.pad(dt, [(0, 0), (0, pad), (0, 0)])
+        Bm = jnp.pad(Bm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        Cm = jnp.pad(Cm, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        S = S + pad
+    nc = S // cl
+    mode = policy.mode("ssm")
+    bwd = policy.bwd("ssm")
+
+    # chunked views
+    x_c = xh.reshape(Bsz, nc, cl, H, dh)
+    dt_c = dt.reshape(Bsz, nc, cl, H)
+    B_c = Bm.reshape(Bsz, nc, cl, G, ds)
+    C_c = Cm.reshape(Bsz, nc, cl, G, ds)
+
+    dA = dt_c * A[None, None, None, :]                # (B,nc,cl,H) negative
+    cum = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                      # (B,nc,H)
+
+    # --- intra-chunk (quadratic, attention-like) --------------------------
+    # decay L[i,j] = exp(cum_i - cum_j) for i >= j
+    Li = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (B,nc,l,s,H)
+    mask = jnp.tril(jnp.ones((cl, cl), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(Li), 0.0)
+    # scores (per group): C_i · B_j
+    # (B,nc,l,G,ds) x (B,nc,s,G,ds) -> (B,nc,G,l,s): batched matmul via mp
+    Cg = C_c.transpose(0, 1, 3, 2, 4)                             # (B,nc,G,l,ds)
+    Bg = B_c.transpose(0, 1, 3, 4, 2)                             # (B,nc,G,ds,s)
+    scores = mp_matmul(Cg, Bg, mode, bwd_mode=bwd)                # (B,nc,G,l,s)
+    # expand groups to heads, weight by decay and dt_j
+    scores = jnp.repeat(scores, hpg, axis=2)                      # (B,nc,H,l,s)
+    Lh = L.transpose(0, 1, 4, 2, 3)                               # (B,nc,H,l,s)
+    w = scores * Lh * dt_c.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    xg = x_c.transpose(0, 1, 3, 2, 4)                             # (B,nc,H,s,dh)
+    y_intra = mp_matmul(w.astype(jnp.float32), xg.astype(jnp.float32),
+                        mode, bwd_mode=bwd)                       # (B,nc,H,l,dh)
+
+    # --- chunk states ------------------------------------------------------
+    # S_chunk = sum_s exp(seg_total - cum_s) * dt_s * B_s ⊗ x_s
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)        # (B,nc,cl,H)
+    wB = (B_c[:, :, :, :, None, :]                                 # (B,nc,cl,G,1,ds)
+          * jnp.ones((1, 1, 1, 1, hpg, 1))).reshape(Bsz, nc, cl, H, ds)
+    wBx = (decay_to_end * dt_c)[..., None] * wB                   # (B,nc,cl,H,ds)
+    # (B,nc,H,dh,cl) @ (B,nc,H,cl,ds) -> (B,nc,H,dh,ds)
+    s_chunk = mp_matmul(x_c.transpose(0, 1, 3, 4, 2).astype(jnp.float32),
+                        wBx.transpose(0, 1, 3, 2, 4).astype(jnp.float32),
+                        mode, bwd_mode=bwd)
+
+    # --- inter-chunk state recurrence (sequential over nc, fp32) ----------
+    seg_decay = jnp.exp(seg_total)                                # (B,nc,H)
+
+    def step(carry, inp):
+        decay, s_new = inp                                        # (B,H),(B,H,dh,ds)
+        prev = carry
+        nxt = prev * decay[:, :, None, None] + s_new
+        return nxt, prev                                          # emit state BEFORE chunk
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bsz, H, dh, ds), jnp.float32))
+    final_state, s_prevs = jax.lax.scan(
+        step, s0,
+        (seg_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)),
+    )
+    s_prev = s_prevs.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,dh,ds)
+
+    # --- inter-chunk contribution: y_inter[l] = exp(cum_l) C_l · S_prev ----
+    Ch = jnp.repeat(C_c.transpose(0, 1, 3, 2, 4), hpg, axis=2)    # (B,nc,H,l,ds)
+    y_inter = mp_matmul(Ch.astype(jnp.float32),
+                        s_prev.transpose(0, 1, 2, 4, 3).astype(jnp.float32),
+                        mode, bwd_mode=bwd)                       # (B,nc,H,l,dh)
+    y_inter = y_inter * jnp.exp(cum).transpose(0, 1, 3, 2)[..., None]
+
+    y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4)              # (B,nc,l,H,dh)
+    y = y.reshape(Bsz, S, H, dh)
+    if S != S_orig:
+        y = y[:, :S_orig]
+    return y, final_state
+
+
+def ssm_forward(
+    params: dict,
+    x: jax.Array,                     # (B, S, D)
+    dims: SSMDims,
+    policy: PrecisionPolicy,
+    *,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    B, S, D = x.shape
+    H, dh, ds, G = dims.n_heads, dims.head_dim, dims.d_state, dims.n_groups
+    mode, bwd = policy.mode("ssm"), policy.bwd("ssm")
+
+    zxbcdt = mp_dense(x, params["in_proj"], mode, bwd_mode=bwd)
+    z, xBC_pre, dt = jnp.split(
+        zxbcdt, [dims.d_inner, dims.d_inner + dims.conv_dim], axis=-1)
+
+    if cache is not None and S == 1:
+        return _decode_step(params, z, xBC_pre, dt, dims, policy, cache)
+
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, params["conv_w"], params["conv_b"]))
+    xs, Bm, Cm = jnp.split(
+        xBC, [dims.d_inner, dims.d_inner + G * ds], axis=-1)
+    xh = xs.reshape(B, S, H, dh)
+    Bm = Bm.reshape(B, S, G, ds)
+    Cm = Cm.reshape(B, S, G, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    y, final_state = _ssd_chunked(xh.astype(jnp.float32), dt, A, Bm, Cm,
+                                  dims, policy)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, dims.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, params["norm_w"])
+    out = mp_dense(y.astype(x.dtype), params["out_proj"], mode, bwd_mode=bwd)
+
+    new_cache = None
+    if cache is not None:  # prefill: stash final conv window + final state
+        K = dims.d_conv
+        conv_tail = xBC_pre[:, S - (K - 1):, :]  # last K-1 pre-conv inputs
+        new_cache = SSMCache(conv=conv_tail.astype(cache.conv.dtype),
+                             state=final_state.astype(cache.state.dtype),
+                             length=cache.length + S)
+    return out, new_cache
+
+
+def _decode_step(params, z, xBC_new, dt, dims: SSMDims,
+                 policy: PrecisionPolicy, cache: SSMCache):
+    """O(1) recurrent decode: roll conv window, update SSM state."""
+    B = z.shape[0]
+    H, dh, ds, G = dims.n_heads, dims.head_dim, dims.d_state, dims.n_groups
+    K = dims.d_conv
+
+    window = jnp.concatenate(
+        [cache.conv.astype(jnp.float32), xBC_new.astype(jnp.float32)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window,
+                          params["conv_w"].astype(jnp.float32)
+                          ) + params["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out)[:, None, :]            # (B,1,conv_dim)
+    xs, Bm, Cm = jnp.split(
+        xBC, [dims.d_inner, dims.d_inner + G * ds], axis=-1)
+    xh = xs.reshape(B, H, dh)
+    Bm = jnp.repeat(Bm.reshape(B, G, ds), H // G, axis=1)   # (B,H,ds)
+    Cm = jnp.repeat(Cm.reshape(B, G, ds), H // G, axis=1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    state = cache.state.astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                   # (B,H)
+    upd = (dt[..., None] * xh)[..., None] * Bm[:, :, None, :]  # (B,H,dh,ds)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhds,bhs->bhd", state, Cm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, dims.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, params["norm_w"])
+    out = mp_dense(y.astype(jnp.float32), params["out_proj"],
+                   policy.mode("ssm"), bwd_mode=policy.bwd("ssm"))
+    new_window = window[:, 1:, :]
+    return out, SSMCache(conv=new_window.astype(cache.conv.dtype),
+                         state=state.astype(cache.state.dtype),
+                         length=cache.length + 1)
+
+
+def make_ssm_cache(batch: int, dims: SSMDims, dtype=jnp.float32) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, dims.d_conv - 1, dims.conv_dim), dtype),
+        state=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state),
+                        dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

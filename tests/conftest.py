@@ -1,0 +1,14 @@
+"""Test session config: give the CPU backend 8 placeholder devices so the
+distributed tests (shard_map MoE dispatch, hierarchical collectives, the
+CI-sized dry-run twin) actually execute under the plain ``pytest tests/``
+invocation.
+
+8, NOT 512: the smoke tests and kernel tests are written against small
+meshes; the 512-device production mesh is exercised only by the dry-run
+launcher, which sets its own XLA_FLAGS before any jax import (see
+repro/launch/dryrun.py).  A pre-existing XLA_FLAGS is respected.
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,121 @@
+"""Fault-tolerance integration tests: checkpoint/restart, NaN rollback with
+precision escalation, elastic mesh restore, straggler detection."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.registry import get_config
+from repro.core.policy import PrecisionPolicy
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train import trainer as trainer_lib
+
+
+def _mk(tmp_path, total=30, ckpt_every=5):
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    tcfg = trainer_lib.TrainerConfig(
+        opt=adamw.AdamWConfig(lr=1e-3),
+        total_steps=total, warmup=2,
+        ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=ckpt_every, keep=2)
+    trainer = trainer_lib.Trainer(cfg, tcfg)
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=17,
+                                  global_batch=4))
+    return cfg, trainer, pipe
+
+
+def test_training_reduces_loss(tmp_path):
+    _, trainer, pipe = _mk(tmp_path)
+    state, history = trainer.run(pipe, num_steps=30, log_every=0)
+    assert len(history) == 30
+    assert history[-1] < history[0]  # synthetic bigram task is learnable
+
+
+def test_restart_resumes_from_checkpoint(tmp_path):
+    _, trainer, pipe = _mk(tmp_path)
+    state, hist1 = trainer.run(pipe, num_steps=12, log_every=0)
+    assert ckpt.latest_step(str(tmp_path / "ckpt")) == 10
+    # simulate a crash: brand-new trainer object, same ckpt dir
+    _, trainer2, pipe2 = _mk(tmp_path)
+    state2, hist2 = trainer2.run(pipe2, num_steps=14, log_every=0)
+    # resumed at step 10 -> only 4 new steps executed
+    assert len(hist2) == 4
+
+
+def test_nan_rollback_and_escalation(tmp_path, monkeypatch):
+    cfg, trainer, pipe = _mk(tmp_path, total=20, ckpt_every=2)
+    state = trainer.init_state()
+    # poison the step function once: inject NaN params at step 5
+    real_fn = trainer._step_fn
+    calls = {"n": 0}
+
+    def poisoned(state, batch):
+        calls["n"] += 1
+        new_state, metrics = real_fn(state, batch)
+        if calls["n"] == 5:
+            bad = jax.tree_util.tree_map(
+                lambda x: x * jnp.nan, new_state.params)
+            new_state = trainer_lib.TrainState(bad, new_state.opt)
+            metrics = dict(metrics)
+            metrics["params_finite"] = jnp.zeros(())
+        return new_state, metrics
+
+    trainer._step_fn = poisoned
+    state, hist = trainer.run(pipe, num_steps=8, state=state, log_every=0)
+    assert trainer.rollbacks >= 1
+    assert len(hist) == 8            # recovered and completed
+    assert all(np.isfinite(hist))
+    # escalation engaged the fp32 policy step fn
+    assert trainer._escalated_fn is not None
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """Checkpoint saved logically restores onto a different device mesh."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    d = str(tmp_path / "ckpt")
+    params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(d, 3, params)
+    like = {"w": jnp.zeros((8, 8), jnp.float32)}
+    # "new topology": 1-device mesh with a different sharding layout
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = ckpt.restore(d, 3, like, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(params["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_straggler_detection(tmp_path):
+    _, trainer, _ = _mk(tmp_path)
+    # feed synthetic step times: stable baseline then a 10x straggler
+    for _ in range(16):
+        trainer._watch_straggler(0.01)
+    trainer._watch_straggler(0.1)
+    assert trainer.straggler_events == 1
+
+
+def test_microbatch_accumulation_matches_full_batch(tmp_path):
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=17, global_batch=4))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+    policy = PrecisionPolicy.full_fp32()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    tc_full = trainer_lib.TrainerConfig(microbatch=0)
+    tc_micro = trainer_lib.TrainerConfig(microbatch=2)
+    loss_full = trainer_lib.make_loss_fn(cfg, policy, tc_full)
+    (l_full, _), g_full = jax.value_and_grad(loss_full, has_aux=True)(
+        params, batch)
+    g_micro, m = trainer_lib._accum_grads(loss_full, params, batch, 2)
+    rel = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))
+                           / (jnp.max(jnp.abs(a)) + 1e-9)),
+        g_full, g_micro)
+    worst = max(jax.tree_util.tree_leaves(rel))
+    assert worst < 5e-4, worst

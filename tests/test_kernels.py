@@ -1,0 +1,137 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Sweeps shapes (aligned, ragged, batched) × modes × input dtypes and asserts
+allclose against ref.mp_matmul_ref and against the fp64 golden product.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.limbs import DD, dd_from_f64
+from repro.core.modes import MODE_TABLE, PrecisionMode, spec as mode_spec
+from repro.kernels import ops, ref
+
+MODES = [PrecisionMode.M8, PrecisionMode.M16, PrecisionMode.M23]
+HIGH_MODES = [PrecisionMode.M36, PrecisionMode.M52]
+SHAPES = [
+    (128, 128, 128),      # aligned
+    (256, 512, 128),      # multi-K-step
+    (100, 200, 72),       # ragged (padding path)
+    (8, 1024, 16),        # skinny
+]
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _err_bound(mode: PrecisionMode, K: int) -> float:
+    """Calibrated error model: limb truncation + fp32 accumulation floor."""
+    s = mode_spec(mode)
+    trunc = 2.0 ** (-(8 * min(s.n_limbs, 3) - 2))  # fp32 inputs carry <=3 limbs
+    accum = 8 * 2.0 ** -24 * np.sqrt(K)
+    return max(trunc, accum)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("shape", SHAPES, ids=["aligned", "multik", "ragged", "skinny"])
+def test_fused_kernel_matches_ref_and_golden(mode, shape):
+    M, K, N = shape
+    rng = np.random.default_rng(42)
+    a, b = _rand(rng, (M, K)), _rand(rng, (K, N))
+    out_k = ops.mp_matmul_pallas(a, b, mode, interpret=True)
+    out_r = ref.mp_matmul_ref(a, b, mode)
+    gold = ref.matmul_golden_f64(a, b)
+    gn = np.linalg.norm(gold)
+    # kernel vs oracle: same algorithm, same products -> tight agreement
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-6, atol=2e-6 * gn / np.sqrt(out_r.size))
+    # kernel vs fp64 golden: within the mode's calibrated error budget
+    rel = np.linalg.norm(np.asarray(out_k, np.float64) - gold) / gn
+    assert rel < _err_bound(mode, K), (mode, rel, _err_bound(mode, K))
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_modes_monotone_accuracy(mode):
+    """Paper claim: more mantissa bits -> strictly better accuracy."""
+    rng = np.random.default_rng(7)
+    a, b = _rand(rng, (128, 256)), _rand(rng, (256, 128))
+    gold = ref.matmul_golden_f64(a, b)
+    gn = np.linalg.norm(gold)
+    errs = {}
+    for m in MODES:
+        out = ops.mp_matmul_pallas(a, b, m, interpret=True)
+        errs[m] = np.linalg.norm(np.asarray(out, np.float64) - gold) / gn
+    assert errs[PrecisionMode.M8] > errs[PrecisionMode.M16] > errs[PrecisionMode.M23]
+
+
+@pytest.mark.parametrize("mode", HIGH_MODES)
+def test_dd_high_modes(mode):
+    """Modes 5/6 with two-float (>24-bit) operands beat plain fp32 rounding of
+    the *inputs*: the DD path must be at least as accurate as M23."""
+    rng = np.random.default_rng(3)
+    a64 = rng.standard_normal((96, 128))
+    b64 = rng.standard_normal((128, 64))
+    add, bdd = dd_from_f64(a64), dd_from_f64(b64)
+    gold = a64 @ b64
+    gn = np.linalg.norm(gold)
+    out = ops.mp_matmul_pallas(add, bdd, mode, interpret=True)
+    rel = np.linalg.norm(np.asarray(out, np.float64) - gold) / gn
+    # fp32-rounding the inputs alone costs ~2^-24; DD limbs must stay below
+    # the compensated-accumulation floor documented in DESIGN.md §2
+    assert rel < 8 * 2.0 ** -24 * np.sqrt(128), rel
+    out_ref = ref.mp_matmul_ref(add, bdd, mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               rtol=3e-6, atol=1e-5)
+
+
+def test_prelimbed_weights_path():
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (4, 64, 384))   # batched activations
+    w = _rand(rng, (384, 256))
+    for mode in MODES:
+        wl = ops.decompose_weights(w, mode_spec(mode).n_limbs, interpret=True)
+        out = ops.mp_matmul_prelimbed_weights(x, wl, mode, interpret=True)
+        out_ref = ref.mp_matmul_ref(x.reshape(-1, 384), w, mode).reshape(4, 64, 256)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                                   rtol=3e-6, atol=1e-4)
+
+
+def test_batched_both_sides():
+    rng = np.random.default_rng(13)
+    a = _rand(rng, (3, 2, 64, 96))
+    b = _rand(rng, (3, 2, 96, 32))
+    out = ops.mp_matmul_pallas(a, b, PrecisionMode.M16, interpret=True)
+    ref_out = ref.mp_matmul_ref(a, b, PrecisionMode.M16)
+    assert out.shape == (3, 2, 64, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=3e-6, atol=1e-4)
+
+
+def test_decompose_kernel_roundtrip():
+    rng = np.random.default_rng(17)
+    w = _rand(rng, (200, 300))
+    for L in (1, 2, 3):
+        wl = ops.decompose_weights(w, L, interpret=True)
+        assert wl.shape == (L, 200, 300) and wl.dtype == jnp.bfloat16
+        recon = np.sum(np.asarray(wl, np.float32), axis=0)
+        resid = np.max(np.abs(recon - np.asarray(w))) / np.max(np.abs(np.asarray(w)))
+        assert resid < 2.0 ** (-8 * L + 2), (L, resid)
+
+
+def test_kernel_under_jit_and_grad_via_public_api():
+    """The public mp_matmul with backend=pallas_interpret must jit and diff."""
+    from repro.core import mp_matmul
+
+    rng = np.random.default_rng(19)
+    a, b = _rand(rng, (64, 128)), _rand(rng, (128, 32))
+
+    @jax.jit
+    def loss(a, b):
+        return jnp.sum(mp_matmul(a, b, PrecisionMode.M16,
+                                 backend="pallas_interpret") ** 2)
+
+    g = jax.grad(loss)(a, b)
+    g_ref = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2))(a, b)
+    assert float(jnp.linalg.norm(g - g_ref) / jnp.linalg.norm(g_ref)) < 1e-4

@@ -1,0 +1,37 @@
+"""Metrics sink: JSONL round-trip, crash-safe append, event records."""
+import jax.numpy as jnp
+
+from repro.train.metrics import MetricsLogger, load_metrics
+
+
+def test_metrics_roundtrip(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    ml = MetricsLogger(path, tokens_per_step=1024)
+    ml.log_step(1, {"loss": jnp.asarray(2.5), "grad_norm": 0.1})
+    ml.log_event("nan_rollback", step=1)
+    ml.log_step(2, {"loss": 2.4, "grad_norm": 0.2})
+    steps, events = load_metrics(path)
+    assert [s["step"] for s in steps] == [1, 2]
+    assert steps[0]["loss"] == 2.5
+    assert steps[0]["tokens_per_s"] > 0
+    assert events[0]["event"] == "nan_rollback"
+    assert ml.median_step_s >= 0
+
+
+def test_trainer_writes_metrics(tmp_path):
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.optim import adamw
+    from repro.train import trainer as trainer_lib
+
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    tcfg = trainer_lib.TrainerConfig(
+        opt=adamw.AdamWConfig(lr=1e-3), total_steps=5, warmup=1,
+        metrics_path=str(tmp_path / "train.jsonl"))
+    tr = trainer_lib.Trainer(cfg, tcfg)
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=17,
+                                  global_batch=2))
+    tr.run(pipe, num_steps=5, log_every=0)
+    steps, _ = load_metrics(str(tmp_path / "train.jsonl"))
+    assert len(steps) == 5
+    assert all("loss" in s and "grad_norm" in s for s in steps)

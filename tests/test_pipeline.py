@@ -1,0 +1,89 @@
+"""Pipeline parallelism: GPipe schedule vs sequential reference, gradients
+through the pipeline, and bubble accounting."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import PrecisionMode, mp_dense
+from repro.dist import pipeline
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 fake devices")
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _layer_fn(lp, h):
+    # a simple residual MLP layer running through the mp multiplier
+    y = mp_dense(h, lp["w1"], PrecisionMode.M16)
+    y = jax.nn.gelu(y)
+    return h + mp_dense(y, lp["w2"], PrecisionMode.M16)
+
+
+def _params(L=8, d=16, f=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.standard_normal((L, d, f)) * 0.1, jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((L, f, d)) * 0.1, jnp.float32),
+    }
+
+
+def _sequential(params, x):
+    def body(h, lp):
+        return _layer_fn(lp, h), None
+
+    out, _ = jax.lax.scan(body, x, params)
+    return out
+
+
+def test_pipeline_matches_sequential(mesh):
+    params = _params()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((8, 4, 16)), jnp.float32)
+    ref = _sequential(params, x)
+    out = jax.jit(lambda p, x: pipeline.pipeline_forward(
+        _layer_fn, p, x, mesh, n_micro=4))(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pipeline_gradients_match(mesh):
+    """Autodiff through ppermute gives the pipeline backward wave; grads must
+    equal the sequential model's."""
+    params = _params(L=4)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 4, 16)), jnp.float32)
+
+    def loss_pipe(p):
+        return jnp.sum(pipeline.pipeline_forward(
+            _layer_fn, p, x, mesh, n_micro=2) ** 2)
+
+    def loss_seq(p):
+        return jnp.sum(_sequential(p, x) ** 2)
+
+    g_pipe = jax.jit(jax.grad(loss_pipe))(params)
+    g_seq = jax.grad(loss_seq)(params)
+    for k in ("w1", "w2"):
+        rel = float(jnp.linalg.norm(g_pipe[k] - g_seq[k])
+                    / (jnp.linalg.norm(g_seq[k]) + 1e-12))
+        assert rel < 1e-4, (k, rel)
+
+
+def test_pipeline_collectives_in_hlo(mesh):
+    """The compiled schedule must move activations with collective-permute
+    (the PP wire), not all-gather the full batch."""
+    params = _params()
+    x = jax.ShapeDtypeStruct((8, 4, 16), jnp.float32)
+    f = jax.jit(lambda p, x: pipeline.pipeline_forward(
+        _layer_fn, p, x, mesh, n_micro=4))
+    txt = f.lower(jax.eval_shape(lambda: _params()), x).compile().as_text()
+    assert "collective-permute" in txt
+
+
+def test_bubble_fraction():
+    assert pipeline.bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert pipeline.bubble_fraction(32, 4) < 0.09
