@@ -167,6 +167,21 @@ def _out_elems(out_shape_str: str) -> int:
     return n
 
 
+def _operand_shapes(ops_str: str, comp: Computation) -> List[Tuple[str, List[int]]]:
+    """(dtype, dims) per dot/collective operand, in order.
+
+    HLO dumps write operands either typed inline ("f32[4,8]{1,0} %x, ...") or
+    as bare references ("%x, %y") — in the latter case fall back to each
+    defining instruction's recorded shape.  NOTE: never split the operand
+    list on "," first; shape literals contain commas."""
+    if "[" in ops_str:
+        return _shape_dims(ops_str)
+    out = []
+    for o in ops_str.split(","):
+        out.extend(_shape_dims(comp.shapes.get(o.strip().lstrip("%"), "")))
+    return out
+
+
 def _dot_flops(rhs: str, out_shape_str: str, comp: Computation) -> float:
     out_n = _out_elems(out_shape_str)
     # contracting dim sizes from the lhs operand's shape
@@ -174,16 +189,13 @@ def _dot_flops(rhs: str, out_shape_str: str, comp: Computation) -> float:
     mop = _OPERANDS_RE.search(rhs)
     k = 1
     if mct and mop:
-        operands = [o.strip().lstrip("%") for o in mop.group(1).split(",")]
-        if operands:
-            lhs_shape = comp.shapes.get(operands[0], "")
-            dims_list = _shape_dims(lhs_shape)
-            if dims_list:
-                _, lhs_dims = dims_list[0]
-                for idx in (mct.group(1).split(",") if mct.group(1) else []):
-                    i = int(idx)
-                    if i < len(lhs_dims):
-                        k *= lhs_dims[i]
+        dims_list = _operand_shapes(mop.group(1), comp)
+        if dims_list:
+            _, lhs_dims = dims_list[0]
+            for idx in (mct.group(1).split(",") if mct.group(1) else []):
+                i = int(idx)
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
     return 2.0 * out_n * k
 
 
@@ -191,8 +203,11 @@ def _dot_bytes(rhs: str, out_shape_str: str, comp: Computation) -> float:
     total = _shape_bytes(out_shape_str)
     mop = _OPERANDS_RE.search(rhs)
     if mop:
-        for o in mop.group(1).split(","):
-            total += _shape_bytes(comp.shapes.get(o.strip().lstrip("%"), ""))
+        for dt, dims in _operand_shapes(mop.group(1), comp):
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES[dt]
     return total
 
 

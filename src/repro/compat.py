@@ -1,0 +1,97 @@
+"""Version-compatibility shims for the pinned jax toolchain.
+
+The codebase targets the current jax API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``); the
+container pins an older jax where those names live elsewhere or do not exist.
+This module back-fills them on import so call sites (and tests) are written
+once, against the modern names.
+
+Installed from ``repro/__init__.py``.  Import must never touch jax device
+state (the dry-run launcher sets XLA_FLAGS before first device init), so the
+probes below use ``inspect.signature`` rather than trial calls.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    sig = inspect.signature(jax.make_mesh)
+    if "axis_types" in sig.parameters:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        # old jax: meshes are implicitly Auto-typed; drop the annotation
+        return orig(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        sig = inspect.signature(jax.shard_map)
+        if "check_vma" in sig.parameters:
+            return
+        orig = jax.shard_map
+        rep_kw = "check_rep" if "check_rep" in sig.parameters else None
+    else:
+        from jax.experimental.shard_map import shard_map as orig
+        rep_kw = "check_rep"
+
+    @functools.wraps(orig)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        # modern name check_vma == old check_rep (replication checking)
+        if check_vma is not None and rep_kw is not None:
+            kw.setdefault(rep_kw, check_vma)
+        return orig(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_cost_analysis() -> None:
+    # modern jax: Compiled.cost_analysis() -> dict; old jax: list[dict]
+    import jax.stages
+
+    Compiled = jax.stages.Compiled
+    orig = Compiled.cost_analysis
+    if getattr(orig, "_repro_compat", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    cost_analysis._repro_compat = True
+    Compiled.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_cost_analysis()
+
+
+install()

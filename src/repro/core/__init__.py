@@ -16,6 +16,16 @@ from repro.core.mpmatmul import (  # noqa: F401
     mode_flops,
     set_default_backend,
     get_default_backend,
+    use_backend,
+)
+# NB: the dispatch() *function* is deliberately not re-exported — binding it
+# on the package would shadow the ``repro.core.dispatch`` submodule attribute.
+# Call it as ``repro.core.dispatch.dispatch`` (or just use mp_matmul).
+from repro.core.dispatch import (  # noqa: F401
+    available_backends,
+    pin_backend,
+    register_backend,
+    unregister_backend,
 )
 from repro.core.auto import mp_matmul_auto, select_mode_index  # noqa: F401
 from repro.core.policy import PrecisionPolicy, get_policy  # noqa: F401

@@ -1,0 +1,241 @@
+"""Unified backend dispatch for ``mp_matmul`` — one routing layer for every
+realization of the paper's reconfigurable multiplier (DESIGN.md §5).
+
+Every ``mp_matmul`` call funnels through :func:`dispatch`, which routes to a
+registered backend:
+
+  ref               pure-jnp limb matmuls (XLA fuses; oracle + dry-run)
+  pallas            fused Pallas kernel, block sizes from the autotune table
+  pallas_interpret  same kernel, interpreter mode (CPU validation)
+  sharded           shard_map data-parallel path: the contraction (K) dim
+                    shards over a 1-D device mesh, each device accumulates
+                    its limb-order partials locally, ONE psum reduces the
+                    (n_orders, M, N) stack, and the compensated cross-order
+                    combine runs after the reduce
+
+The sharded backend's collective placement is mode-aware by construction:
+the reduce payload is ``n_orders × M × N`` fp32 — 1× for M8 up to 7× for M52
+— instead of ``n_products`` separate reduces (up to 28×).  Low modes cut
+communication bytes, not just MXU passes.  Reducing *per-order* partials
+(rather than locally combining to one buffer) keeps the numerics
+partition-invariant: the Neumaier combine sees the same per-order totals a
+single device would, so shard count never changes which rounding the result
+absorbs beyond fp32 psum reassociation.
+
+The custom VJP lives one level up (core/mpmatmul.py) and treats every backend
+uniformly — backward passes re-enter ``dispatch`` at ``bwd_mode``.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.limbs import DD
+from repro.core.modes import PrecisionMode
+from repro.kernels import ref as ref_backend
+
+Operand = Union[jax.Array, DD]
+
+BACKENDS = ("ref", "pallas", "pallas_interpret", "sharded")
+
+_DEFAULT_BACKEND = os.environ.get("REPRO_MP_BACKEND", "ref")
+_AUTOTUNE_ENV = "REPRO_MP_AUTOTUNE"
+
+
+# ---------------------------------------------------------------------------
+# default-backend plumbing
+# ---------------------------------------------------------------------------
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
+    _DEFAULT_BACKEND = name
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    """Scoped default backend (trace-time: wrap the jit call, not the step)."""
+    prev = get_default_backend()
+    set_default_backend(name)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+def _run_ref(a: Operand, b: Operand, mode: PrecisionMode, out_dtype):
+    return ref_backend.mp_matmul_ref(a, b, mode, out_dtype=out_dtype)
+
+
+def _tuned_blocks(a: Operand, b: Operand, mode: PrecisionMode, interpret: bool
+                  ) -> Tuple[Optional[int], Optional[int], Optional[int]]:
+    """Autotune-table lookup for the shape ops.mp_matmul_pallas will run.
+
+    Mirrors the ops layer's batch folding: an a-batched × 2-D b contraction
+    folds the batch into M.  Sweeps happen only under REPRO_MP_AUTOTUNE=1 —
+    otherwise this is a pure table read (cold processes never stall)."""
+    if isinstance(a, DD) or isinstance(b, DD):
+        return None, None, None
+    if b.ndim != 2:
+        return None, None, None
+    from repro.kernels import autotune
+
+    M = 1
+    for d in a.shape[:-1]:
+        M *= d
+    K, N = b.shape
+    if os.environ.get(_AUTOTUNE_ENV, "") == "1":
+        bm, bk, bn = autotune.autotune(M, K, N, mode, dtype=jnp.float32,
+                                       interpret=interpret)
+        return bm, bk, bn
+    blocks = autotune.lookup(M, K, N, mode)
+    return blocks if blocks is not None else (None, None, None)
+
+
+def _run_pallas(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+                *, interpret: bool):
+    from repro.kernels import ops as pallas_backend  # deferred: imports pallas
+
+    interpret = interpret or jax.default_backend() == "cpu"
+    bm, bk, bn = _tuned_blocks(a, b, mode, interpret)
+    return pallas_backend.mp_matmul_pallas(
+        a, b, mode, out_dtype=out_dtype, interpret=interpret,
+        bm=bm, bk=bk, bn=bn)
+
+
+def _sharded_2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
+                mesh, axis: str) -> jax.Array:
+    n = mesh.shape[axis]
+    K = a.shape[1]
+    pad = (-K) % n
+    if pad:
+        # zero K-padding is exact: limbs of 0 are 0, contributing nothing to
+        # any order's partial sum
+        a = jnp.pad(a, [(0, 0), (0, pad)])
+        b = jnp.pad(b, [(0, pad), (0, 0)])
+
+    def local(a_loc: jax.Array, b_loc: jax.Array) -> jax.Array:
+        partials = ref_backend.mp_matmul_partials(a_loc, b_loc, mode)
+        return jax.lax.psum(partials, axis)  # (n_orders, M, N), ONE collective
+
+    partials = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, axis), P(axis, None)),
+        out_specs=P(None, None, None),
+        check_vma=False,
+    )(a, b)
+    return ref_backend.combine_partials(partials, mode, out_dtype=out_dtype)
+
+
+def _bound_axis_names() -> Tuple:
+    """Mesh axis names bound by an enclosing shard_map/xmap/named-vmap scope.
+
+    Nested shard_map is unsupported — a sharded-backend matmul inside e.g.
+    the MoE expert-parallel body must fall back to local compute (the outer
+    scope already owns the devices)."""
+    try:
+        from jax._src import core as _core  # no public accessor on old jax
+
+        if hasattr(_core, "unsafe_get_axis_names"):
+            return tuple(_core.unsafe_get_axis_names())
+        return tuple(_core.get_axis_env().axis_names())
+    except Exception:
+        return ()
+
+
+def _run_sharded(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+                 *, mesh=None, axis: str = "data"):
+    """K-sharded multi-device path; falls back to ref where sharding the
+    contraction cannot help (DD operands, both-batched einsums, 1 device)
+    or cannot work (already inside a shard_map scope)."""
+    if isinstance(a, DD) or isinstance(b, DD) or b.ndim != 2:
+        return _run_ref(a, b, mode, out_dtype)
+    if _bound_axis_names():
+        return _run_ref(a, b, mode, out_dtype)
+    if mesh is None:
+        from repro.launch import mesh as mesh_lib  # deferred: device init
+
+        mesh = mesh_lib.make_matmul_mesh(axis=axis)
+    if mesh.shape[axis] == 1:
+        return _run_ref(a, b, mode, out_dtype)
+    lead = a.shape[:-1]
+    out = _sharded_2d(a.reshape(-1, a.shape[-1]), b, mode, out_dtype,
+                      mesh, axis)
+    return out.reshape(tuple(lead) + (b.shape[-1],))
+
+
+_REGISTRY: Dict[str, Callable] = {
+    "ref": lambda a, b, mode, out_dtype: _run_ref(a, b, mode, out_dtype),
+    "pallas": lambda a, b, mode, out_dtype: _run_pallas(
+        a, b, mode, out_dtype, interpret=False),
+    "pallas_interpret": lambda a, b, mode, out_dtype: _run_pallas(
+        a, b, mode, out_dtype, interpret=True),
+    "sharded": lambda a, b, mode, out_dtype: _run_sharded(
+        a, b, mode, out_dtype),
+}
+
+
+def register_backend(name: str, fn: Callable) -> None:
+    """Extension point: fn(a, b, mode, out_dtype) -> (..., M, N) array.
+
+    Built-in names are reserved — overwriting "ref" would silently reroute
+    every oracle comparison in the process with no way back."""
+    if name in BACKENDS:
+        raise ValueError(f"cannot override built-in backend {name!r}")
+    _REGISTRY[name] = fn
+
+
+def unregister_backend(name: str) -> None:
+    if name in BACKENDS:
+        raise ValueError(f"cannot unregister built-in backend {name!r}")
+    _REGISTRY.pop(name, None)
+
+
+def pin_backend(fn: Callable, backend: Optional[str]) -> Callable:
+    """Wrap ``fn`` so its (re)traces run under ``use_backend(backend)``.
+
+    The backend is read at *trace* time, so the context must be live while
+    tracing — wrapping the jit-decorated callable's body (this) works;
+    wrapping the ``jax.jit(...)`` construction does not.  ``backend`` of
+    None/"" returns ``fn`` unchanged."""
+    if not backend:
+        return fn
+
+    def wrapped(*args, **kwargs):
+        with use_backend(backend):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def dispatch(
+    a: Operand,
+    b: Operand,
+    mode: PrecisionMode,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Route one static-mode matmul to a backend (the single funnel every
+    forward/backward limb contraction passes through)."""
+    name = backend or _DEFAULT_BACKEND
+    fn = _REGISTRY.get(name)
+    if fn is None:
+        raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
+    return fn(a, b, PrecisionMode(mode), out_dtype)

@@ -60,6 +60,19 @@ class ModeSpec:
         )
 
     @property
+    def n_orders(self) -> int:
+        """Number of distinct limb-product orders (= max_order + 1).
+
+        This is the payload multiplier of the sharded backend's cross-device
+        reduce: per-order partials are accumulated locally and reduced as one
+        (n_orders, M, N) fp32 stack so the compensated combine happens once,
+        after the reduce (DESIGN.md §5).  Low modes therefore cut
+        communication bytes, not just MXU passes: M8 ships 1×MN, M52 7×MN —
+        versus n_products×MN (up to 28×) if each limb product were reduced
+        separately."""
+        return self.max_order + 1
+
+    @property
     def products(self) -> Tuple[Tuple[int, int], ...]:
         """The kept (i, j) limb-product index pairs, sorted by descending order
 

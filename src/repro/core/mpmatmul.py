@@ -5,50 +5,43 @@ composable JAX primitive.
 framework uses for dense contractions.  It is differentiable (custom VJP whose
 backward passes may run at a *different* mode — production mixed-precision
 recipes usually give wgrad/dgrad more bits than fwd), batched, and
-backend-switchable:
+backend-switchable through the unified dispatch layer (core/dispatch.py,
+DESIGN.md §5):
 
-  backend="ref"     pure-jnp limb matmuls (XLA fuses; used for dry-run/lowering)
-  backend="pallas"  fused Pallas kernel (TPU target; interpret=True on CPU)
+  backend="ref"               pure-jnp limb matmuls (XLA fuses; dry-run/oracle)
+  backend="pallas"            fused Pallas kernel, autotuned block sizes
+  backend="pallas_interpret"  same kernel, interpreter mode (CPU validation)
+  backend="sharded"           shard_map multi-device path (K-sharded, one
+                              per-order psum, combine after the reduce)
+
+The mode-split is preserved across every backend: the custom VJP wraps the
+dispatch call, so forward and backward can run different modes on different
+backends through one code path.
 """
 from __future__ import annotations
 
 import functools
-import os
 from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as dispatch_lib
+from repro.core.dispatch import (  # noqa: F401  (re-exported public API)
+    get_default_backend,
+    set_default_backend,
+    use_backend,
+)
 from repro.core.limbs import DD
 from repro.core.modes import PrecisionMode, spec as mode_spec
-from repro.kernels import ref as ref_backend
 
 Operand = Union[jax.Array, DD]
 
-_DEFAULT_BACKEND = os.environ.get("REPRO_MP_BACKEND", "ref")
 
-
-def set_default_backend(name: str) -> None:
-    global _DEFAULT_BACKEND
-    assert name in ("ref", "pallas", "pallas_interpret"), name
-    _DEFAULT_BACKEND = name
-
-
-def get_default_backend() -> str:
-    return _DEFAULT_BACKEND
-
-
-def _run(a: Operand, b: Operand, mode: PrecisionMode, backend: str,
+def _run(a: Operand, b: Operand, mode: PrecisionMode, backend: Optional[str],
          out_dtype) -> jax.Array:
-    if backend == "ref":
-        return ref_backend.mp_matmul_ref(a, b, mode, out_dtype=out_dtype)
-    # deferred import: kernels.ops imports pallas
-    from repro.kernels import ops as pallas_backend
-
-    interpret = backend == "pallas_interpret" or jax.default_backend() == "cpu"
-    return pallas_backend.mp_matmul_pallas(
-        a, b, mode, out_dtype=out_dtype, interpret=interpret
-    )
+    return dispatch_lib.dispatch(a, b, mode, backend=backend,
+                                 out_dtype=out_dtype)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
@@ -113,7 +106,7 @@ def mp_matmul(
     ``lax.switch`` — only the selected branch executes, the analogue of the
     paper powering only the selected multiplier unit.
     """
-    backend = backend or _DEFAULT_BACKEND
+    backend = backend or get_default_backend()
     if mode == PrecisionMode.AUTO:
         from repro.core import auto  # circular-import avoidance
 

@@ -1,0 +1,3 @@
+"""Distribution layer: sharding rules, explicit collectives, pipeline
+parallelism.  See DESIGN.md §5 for how these compose with the mp_matmul
+dispatch layer."""

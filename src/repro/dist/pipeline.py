@@ -1,0 +1,95 @@
+"""GPipe pipeline parallelism over the model axis (shard_map + ppermute).
+
+The L stacked layers split into ``n_stages = mesh.shape[stage_axis]``
+contiguous stages; microbatches flow through the stage ring with
+collective-permute as the wire (no all-gather of activations).  Forward-only —
+the backward wave falls out of autodiff through ppermute (tested in
+tests/test_pipeline.py::test_pipeline_gradients_match).
+
+Schedule: plain GPipe fill-drain.  ``bubble_fraction`` gives the idle share
+(n_stages - 1) / (n_micro + n_stages - 1) — the reason benchmarks run
+n_micro >= 8x stages (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Idle fraction of the GPipe schedule (fill + drain bubbles)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_forward(
+    layer_fn: Callable,
+    params,
+    x: jax.Array,
+    mesh: Mesh,
+    *,
+    n_micro: int,
+    stage_axis: str = "model",
+) -> jax.Array:
+    """Run ``layer_fn`` (lp, h) -> h over L stacked layers as a pipeline.
+
+    params: pytree with leading layer dim L (L % n_stages == 0);
+    x: (B, ...) with B % n_micro == 0.  Matches the sequential lax.scan over
+    layers up to fp reassociation."""
+    n_stages = mesh.shape[stage_axis]
+    L = jax.tree_util.tree_leaves(params)[0].shape[0]
+    assert L % n_stages == 0, (L, n_stages)
+    per_stage = L // n_stages
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+
+    staged = jax.tree_util.tree_map(
+        lambda w: w.reshape((n_stages, per_stage) + w.shape[1:]), params)
+    xm = x.reshape((n_micro, mb) + x.shape[1:])
+
+    def stage_program(sp, xm):
+        sp = jax.tree_util.tree_map(lambda w: w[0], sp)  # local (per_stage,...)
+        idx = jax.lax.axis_index(stage_axis)
+
+        def apply_stage(h):
+            def body(h, lp):
+                return layer_fn(lp, h), None
+
+            h, _ = jax.lax.scan(body, h, sp)
+            return h
+
+        def step(carry, t):
+            state, outs = carry
+            # stage 0 pulls the next microbatch; later stages take the wire
+            inp = jax.lax.dynamic_index_in_dim(
+                xm, jnp.clip(t, 0, n_micro - 1), keepdims=False)
+            cur = jnp.where(idx == 0, inp, state)
+            out = apply_stage(cur)
+            # last stage emits microbatch t - (n_stages - 1) once the fill
+            # bubble has drained
+            o_idx = t - (n_stages - 1)
+            valid = jnp.logical_and(idx == n_stages - 1, o_idx >= 0)
+            oc = jnp.clip(o_idx, 0, n_micro - 1)
+            prev = jax.lax.dynamic_index_in_dim(outs, oc, keepdims=False)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(valid, out, prev), oc, axis=0)
+            nxt = jax.lax.ppermute(
+                out, stage_axis, [(i, i + 1) for i in range(n_stages - 1)])
+            return (nxt, outs), None
+
+        steps = n_micro + n_stages - 1
+        carry = (jnp.zeros_like(xm[0]), jnp.zeros_like(xm))
+        (_, outs), _ = jax.lax.scan(step, carry, jnp.arange(steps))
+        # only the last stage holds real outputs; psum broadcasts them
+        mask = (idx == n_stages - 1).astype(outs.dtype)
+        return jax.lax.psum(outs * mask, stage_axis)
+
+    out = jax.shard_map(
+        stage_program, mesh=mesh,
+        in_specs=(P(stage_axis), P(None)), out_specs=P(None),
+        check_vma=False,
+    )(staged, xm)
+    return out.reshape(x.shape)

@@ -1,0 +1,209 @@
+"""Logical sharding rules: one AxisRules object describes how a (arch × shape
+× phase) cell lays out on the mesh, and the model code asks for constraints by
+*logical name* ("activations_seq", "attn_heads", ...) instead of hardcoding
+PartitionSpecs.  DESIGN.md §5.
+
+The rules are carried in a context variable (``use_rules``) so the model
+forward — shared verbatim between single-device tests, the serving engine and
+the 512-chip dry-run — stays mesh-agnostic: with no rules installed every
+``constrain`` is the identity.
+
+Layout vocabulary (see launch/specs.make_rules for the per-cell decision):
+  batch_axes  mesh axes the global batch shards over (FSDP absorbs "model")
+  model_axis  the tensor-parallel / sequence-parallel axis
+  seq_axes    axes the activation *sequence* dim shards over (Megatron-SP /
+              Ulysses); empty when the model axis is absorbed into batch
+  tp_enabled  weights sharded over model_axis (Megatron TP)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _entry(axes: Tuple[str, ...]):
+    """Tuple of mesh axes -> a PartitionSpec entry (None / name / tuple)."""
+    axes = tuple(a for a in axes if a)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Sharding layout of one lowering cell (frozen; safe as a jit closure)."""
+
+    mesh: Mesh
+    batch_axes: Tuple[Optional[str], ...] = (None,)
+    model_axis: str = "model"
+    seq_axes: Tuple[str, ...] = ()
+    tp_enabled: bool = False
+
+    # -- spec entries ------------------------------------------------------
+    @property
+    def batch(self):
+        return _entry(tuple(a for a in self.batch_axes if a))
+
+    @property
+    def seq(self):
+        return _entry(self.seq_axes)
+
+    @property
+    def model_free(self) -> bool:
+        """Is the model axis available for weight/head sharding (not already
+        consumed by batch absorption)?"""
+        return (self.model_axis in self.mesh.axis_names
+                and self.model_axis not in self.batch_axes)
+
+    # -- helpers -----------------------------------------------------------
+    def axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, *entries) -> P:
+        return P(*entries)
+
+    def sharding(self, *entries) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*entries))
+
+
+_RULES: contextvars.ContextVar[Optional[AxisRules]] = contextvars.ContextVar(
+    "repro_axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _RULES.get()
+
+
+# ---------------------------------------------------------------------------
+# logical constraint table
+# ---------------------------------------------------------------------------
+def _logical_entries(name: str, ndim: int, rules: AxisRules):
+    """Map a logical activation name to per-dim spec entries."""
+    b, s = rules.batch, rules.seq
+    m = rules.model_axis if rules.model_free else None
+    vocab = (m if rules.tp_enabled and m is not None
+             and m not in (rules.seq_axes or ()) else None)
+    table = {
+        #                      (B, S, D)
+        "activations":         (b, None, None),
+        "activations_seq":     (b, s, None),
+        #                      (B, S, V)
+        "logits":              (b, s, vocab),
+        #                      (B, S, H, Dh)
+        "attn_heads":          (b, None, m, None),
+        "attn_out_seq":        (b, s, None, None),
+    }
+    if name not in table:
+        raise KeyError(f"unknown logical sharding name: {name!r}")
+    entries = list(table[name])
+    # pad/truncate defensively: extra leading batch dims stay unconstrained
+    while len(entries) < ndim:
+        entries.insert(0, None)
+    return entries[-ndim:]
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """with_sharding_constraint by logical name; identity when no rules are
+    installed or when a dim does not divide its assigned axes."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    entries = _logical_entries(name, x.ndim, rules)
+    for i, e in enumerate(entries):
+        if e is not None and x.shape[i] % rules.axis_size(e) != 0:
+            entries[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# parameter / cache layouts
+# ---------------------------------------------------------------------------
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "name", k))))
+    return "/".join(parts)
+
+
+def param_shardings(params, rules: AxisRules):
+    """NamedSharding pytree for the model/optimizer parameters.
+
+    TP layouts shard the contraction-output dim of each weight over the model
+    axis (Megatron: column-parallel up/gate/qkv, row-parallel down/out); FSDP
+    layouts shard the trailing dim over the data-parallel axis group (ZeRO-3
+    style — GSPMD inserts the gather per layer).  Non-divisible dims stay
+    replicated: correctness first, the partitioner still propagates."""
+    mesh = rules.mesh
+
+    def leaf(path, x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        entries = [None] * x.ndim
+        names = _path_str(path)
+        if rules.tp_enabled and rules.model_free:
+            msize = mesh.shape[rules.model_axis]
+            row_parallel = any(t in names for t in ("w_down", "wo", "w_o"))
+            dim = x.ndim - 2 if (row_parallel and x.ndim >= 2) else x.ndim - 1
+            if x.shape[dim] % msize == 0:
+                entries[dim] = rules.model_axis
+        else:
+            axes = tuple(a for a in rules.batch_axes if a)
+            if axes:
+                prod = 1
+                for a in axes:
+                    prod *= mesh.shape[a]
+                dim = x.ndim - 1
+                if x.shape[dim] % prod == 0:
+                    entries[dim] = _entry(axes)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def cache_specs(cache, rules: AxisRules, *, seq_axes=()):
+    """PartitionSpec pytree for stacked decode caches.
+
+    Stacked cache leaves are (L, B, S_max, ...) — dim 1 shards over the batch
+    group, dim 2 (the cache sequence) over ``seq_axes`` (the model axis
+    normally; every idle axis for batch=1 long-context).  Leaves without a
+    sequence dim (SSM states, lengths) shard batch only."""
+    if isinstance(seq_axes, str):
+        seq_axes = (seq_axes,)
+    seq_axes = tuple(a for a in (seq_axes or ())
+                     if a and a in rules.mesh.axis_names)
+    bentry = rules.batch
+
+    def leaf(x):
+        if x.ndim < 2:
+            return P()
+        entries = [None] * x.ndim
+        if bentry is not None and x.shape[1] % rules.axis_size(bentry) == 0:
+            entries[1] = bentry
+        if x.ndim >= 4 and seq_axes:
+            sentry = _entry(seq_axes)
+            if x.shape[2] % rules.axis_size(sentry) == 0:
+                entries[2] = sentry
+        return P(*entries)
+
+    return jax.tree_util.tree_map(leaf, cache)

@@ -1,0 +1,201 @@
+"""Block-size autotuner for the fused Pallas mp_matmul kernel (DESIGN.md §6).
+
+The kernel's (bm, bn, bk) tile sizes trade MXU utilization against VMEM
+pressure, and the right point moves with the precision mode: high modes carry
+n_limbs bf16 limb tiles plus n_orders fp32 accumulators per grid step, so M52
+wants smaller tiles than M8 on the same part.  The tuner:
+
+  1. enumerates TPU-aligned candidates (bm % 8, bn % 128, bk % 128) clamped
+     to the padded problem,
+  2. filters them against the per-core VMEM budget
+     (``kernels.mp_matmul.vmem_bytes``),
+  3. times each surviving candidate on the real kernel and keeps the median
+     winner,
+  4. caches winners in a persistent on-disk JSON table **keyed by device
+     kind** (``~/.cache/repro/autotune/<device_kind>.json``), so one sweep
+     per (mode, shape, dtype) serves every later process on the same part.
+
+Sweeps only run when explicitly requested (``REPRO_MP_AUTOTUNE=1`` or an
+``autotune=True`` dispatch call) — a cold serving process must never stall on
+a measurement loop; it falls back to the static defaults in kernels/ops.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.modes import PrecisionMode
+from repro.kernels import mp_matmul as kern
+
+BlockSizes = Tuple[int, int, int]  # (bm, bk, bn)
+
+# per-core VMEM budget for one grid step; leave headroom for pipelining
+# (double-buffered input tiles) and the compiler's own scratch.
+VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 12 * 1024 * 1024))
+
+# TPU-aligned sweep grid (fp32 tiles are (8, 128); MXU likes >=128)
+_BM_CANDS = (64, 128, 256, 512)
+_BN_CANDS = (128, 256, 512)
+_BK_CANDS = (128, 256, 512, 1024)
+
+_memory_table: Dict[str, Dict[str, List[int]]] = {}  # device_kind -> key -> blocks
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind.replace(" ", "_").replace("/", "_")
+
+
+def cache_dir() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune"))
+
+
+def _cache_path(kind: Optional[str] = None) -> str:
+    return os.path.join(cache_dir(), f"{kind or device_kind()}.json")
+
+
+def table_key(M: int, K: int, N: int, mode: PrecisionMode, dtype) -> str:
+    return f"{PrecisionMode(mode).name}|{M}x{K}x{N}|{jnp.dtype(dtype).name}"
+
+
+def load_table(kind: Optional[str] = None) -> Dict[str, List[int]]:
+    kind = kind or device_kind()
+    if kind not in _memory_table:
+        try:
+            with open(_cache_path(kind)) as f:
+                _memory_table[kind] = {
+                    k: list(map(int, v)) for k, v in json.load(f).items()}
+        except (OSError, ValueError):
+            _memory_table[kind] = {}
+    return _memory_table[kind]
+
+
+def save_table(table: Dict[str, List[int]], kind: Optional[str] = None) -> str:
+    """Atomic write (tmp + rename): concurrent processes never see a torn
+    table, last writer wins."""
+    path = _cache_path(kind)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def candidate_blocks(
+    M: int, K: int, N: int,
+    mode: PrecisionMode,
+    *,
+    out_dtype=jnp.float32,
+    vmem_budget: int = 0,
+) -> List[BlockSizes]:
+    """Aligned (bm, bk, bn) candidates that fit the problem and the budget."""
+    budget = vmem_budget or VMEM_BUDGET_BYTES
+    mp, kp, np_ = _round_up(M, 8), _round_up(K, 128), _round_up(N, 128)
+    out = []
+    for bm in _BM_CANDS:
+        if bm > mp and bm != _BM_CANDS[0]:
+            continue
+        for bn in _BN_CANDS:
+            if bn > np_ and bn != _BN_CANDS[0]:
+                continue
+            for bk in _BK_CANDS:
+                if bk > kp and bk != _BK_CANDS[0]:
+                    continue
+                cand = (min(bm, _round_up(M, 8)),
+                        min(bk, _round_up(K, 128)),
+                        min(bn, _round_up(N, 128)))
+                if kern.vmem_bytes(mode, cand[0], cand[1], cand[2],
+                                   out_dtype) > budget:
+                    continue
+                if cand not in out:
+                    out.append(cand)
+    return out
+
+
+def _time_blocks(a, b, mode, blocks: BlockSizes, *, out_dtype, interpret,
+                 iters: int) -> float:
+    from repro.kernels import ops  # deferred: ops imports this module
+
+    bm, bk, bn = blocks
+    fn = jax.jit(lambda x, y: ops.mp_matmul_pallas(
+        x, y, mode, out_dtype=out_dtype, interpret=interpret,
+        bm=bm, bk=bk, bn=bn))
+    jax.block_until_ready(fn(a, b))  # compile
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(a, b))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def autotune(
+    M: int, K: int, N: int,
+    mode: PrecisionMode,
+    *,
+    dtype=jnp.float32,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    iters: int = 3,
+    candidates: Optional[Sequence[BlockSizes]] = None,
+) -> BlockSizes:
+    """Sweep candidates for one (mode, shape, dtype) cell; persist the winner.
+
+    Returns the cached winner immediately when the table already has the key
+    (in-memory first, then the on-disk table for this device kind)."""
+    mode = PrecisionMode(mode)
+    key = table_key(M, K, N, mode, dtype)
+    table = load_table()
+    if key in table:
+        bm, bk, bn = table[key]
+        return bm, bk, bn
+
+    cands = list(candidates) if candidates is not None else candidate_blocks(
+        M, K, N, mode, out_dtype=out_dtype)
+    if not cands:
+        raise ValueError(
+            f"no feasible block sizes for {key} under "
+            f"{VMEM_BUDGET_BYTES} bytes of VMEM")
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((M, K)), dtype)
+    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+
+    best, best_t = None, float("inf")
+    for cand in cands:
+        t = _time_blocks(a, b, mode, cand, out_dtype=out_dtype,
+                         interpret=interpret, iters=iters)
+        if t < best_t:
+            best, best_t = cand, t
+
+    table[key] = list(best)
+    save_table(table)
+    return best
+
+
+def lookup(M: int, K: int, N: int, mode: PrecisionMode, dtype=jnp.float32
+           ) -> Optional[BlockSizes]:
+    """Cached winner or None — never triggers a sweep (the serving-safe path)."""
+    entry = load_table().get(table_key(M, K, N, mode, dtype))
+    if entry is None:
+        return None
+    bm, bk, bn = entry
+    return bm, bk, bn
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process table cache (tests re-point the cache dir)."""
+    _memory_table.clear()

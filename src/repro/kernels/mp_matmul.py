@@ -1,7 +1,7 @@
 """Pallas TPU kernel: fused multi-precision limb matmul.
 
 This is the performance-critical realization of the paper's reconfigurable
-multiplier (DESIGN.md §2).  One kernel invocation performs *all* selected limb
+multiplier (DESIGN.md §4; limb algebra in §2).  One kernel invocation performs *all* selected limb
 products for a (bm×bn) output tile while the A/B tiles sit in VMEM:
 
     HBM traffic  = read A once + read B once + write C once   (mode-independent)
@@ -153,12 +153,29 @@ def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec,
 
 
 def _compiler_params():
-    try:
-        return pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except TypeError:  # API drift guard
-        return None
+    for cls_name in ("CompilerParams", "TPUCompilerParams"):  # API drift guard
+        cls = getattr(pltpu, cls_name, None)
+        if cls is None:
+            continue
+        try:
+            return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        except TypeError:
+            continue
+    return None
+
+
+def vmem_bytes(mode: PrecisionMode, bm: int, bk: int, bn: int,
+               out_dtype=jnp.float32) -> int:
+    """VMEM footprint of one fused-kernel grid step (the autotuner's feasibility
+    filter, kernels/autotune.py): A/B f32 tiles + on-the-fly bf16 limbs +
+    per-order f32 accumulators + the output tile."""
+    s = mode_spec(mode)
+    a_tile = bm * bk * 4
+    b_tile = bk * bn * 4
+    limbs = s.n_limbs * (bm * bk + bk * bn) * 2
+    acc = s.n_orders * bm * bn * 4
+    out = bm * bn * jnp.dtype(out_dtype).itemsize
+    return a_tile + b_tile + limbs + acc + out
 
 
 def build_fused_call(

@@ -71,14 +71,6 @@ def mp_matmul_ref(
             out = p if out is None else out + p
         return out.astype(out_dtype)
 
-    if s.n_limbs <= 3:
-        # batched case (attention einsums): separate products, plain sum
-        out = None
-        for (i, j) in s.products:  # descending order: small terms first
-            p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
-            out = p if out is None else out + p
-        return out.astype(out_dtype)
-
     # high modes (M36/M52): per-order fp32 accumulators, compensated combine
     # (accuracy-critical; these modes are rare in production policies)
     by_order: dict[int, list[jax.Array]] = {}
@@ -96,6 +88,45 @@ def mp_matmul_ref(
 
     out = limbs_lib.neumaier_sum(order_sums)
     return out.astype(out_dtype)
+
+
+def mp_matmul_partials(
+    a: Operand,
+    b: Operand,
+    mode: PrecisionMode,
+) -> jax.Array:
+    """Per-order partial sums: (n_orders, ..., M, N) fp32, order o at index o.
+
+    The sharded backend's local compute step (DESIGN.md §5): each device
+    accumulates its K-slice's limb products *per order* and the cross-device
+    psum reduces this stack — the compensated cross-order combine
+    (``combine_partials``) then runs once on the fully-reduced partials, so
+    the K partition does not change which terms each compensation sees."""
+    s = mode_spec(mode)
+    al = _limbs_of(a, s.n_limbs)
+    bl = _limbs_of(b, s.n_limbs)
+    by_order: dict[int, jax.Array] = {}
+    for (i, j) in s.products:
+        p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+        o = i + j
+        by_order[o] = p if o not in by_order else by_order[o] + p
+    return jnp.stack([by_order[o] for o in range(s.n_orders)], axis=0)
+
+
+def combine_partials(
+    partials: jax.Array,
+    mode: PrecisionMode,
+    *,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Compensated cross-order combine of a ``mp_matmul_partials`` stack.
+
+    Order o carries magnitude ~2^-8o, so summation runs highest order first
+    (smallest magnitude -> largest), matching the ref/Pallas accumulation
+    order."""
+    s = mode_spec(mode)
+    terms = [partials[o] for o in range(s.n_orders - 1, -1, -1)]
+    return limbs_lib.neumaier_sum(terms).astype(out_dtype)
 
 
 def matmul_golden_f64(a, b) -> np.ndarray:

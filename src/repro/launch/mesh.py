@@ -23,6 +23,26 @@ def make_production_mesh(*, multi_pod: bool = False):
         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def make_matmul_mesh(n_devices: int = 0, axis: str = "data"):
+    """1-D mesh for the sharded mp_matmul backend (core/dispatch.py).
+
+    The contraction (K) dim of the matmul shards over ``axis``; per-order
+    partials are psum'd across it (DESIGN.md §5).  Default: every visible
+    device.  Cached per (n, axis) so repeated dispatch calls under jit reuse
+    one mesh object (mesh identity matters for jax caching)."""
+    n = n_devices or len(jax.devices())
+    key = (n, axis)
+    cached = _MATMUL_MESHES.get(key)
+    if cached is None:
+        cached = jax.make_mesh(
+            (n,), (axis,), axis_types=(jax.sharding.AxisType.Auto,))
+        _MATMUL_MESHES[key] = cached
+    return cached
+
+
+_MATMUL_MESHES: dict = {}
+
+
 def make_debug_mesh(data: int = 2, model: int = 4, pod: int = 0):
     """Small mesh for CI-sized shard_map tests (8 fake host devices)."""
     if pod:

@@ -35,15 +35,24 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512,
                  policy: Optional[PrecisionPolicy] = None, mesh=None,
-                 greedy: bool = True):
+                 greedy: bool = True, matmul_backend: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.policy = policy or PrecisionPolicy.serve_default()
         self.greedy = greedy
-        self._prefill = jax.jit(make_prefill_step(cfg, self.policy, mesh))
-        self._decode = jax.jit(make_serve_step(cfg, self.policy, mesh))
+        # backend routing is a trace-time decision (core/dispatch.py): the
+        # wrapper pins it around the traced body so one engine can run ref on
+        # CPU CI, the autotuned Pallas kernel on a TPU slice, or the sharded
+        # path on a multi-device host without touching the model code
+        self.matmul_backend = matmul_backend
+        from repro.core.dispatch import pin_backend
+
+        self._prefill = jax.jit(pin_backend(
+            make_prefill_step(cfg, self.policy, mesh), matmul_backend))
+        self._decode = jax.jit(pin_backend(
+            make_serve_step(cfg, self.policy, mesh), matmul_backend))
         self.cache = T.make_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self._slots: List[Optional[Request]] = [None] * max_batch
 

@@ -57,6 +57,9 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     escalate_on_nan: bool = True
     metrics_path: str = ""       # JSONL observability sink (train/metrics.py)
+    # mp_matmul dispatch backend for the jit'd steps ("" = session default;
+    # "ref" / "pallas" / "pallas_interpret" / "sharded" — core/dispatch.py)
+    matmul_backend: str = ""
 
 
 def make_loss_fn(cfg: ModelConfig, policy: PrecisionPolicy,
@@ -105,7 +108,9 @@ def make_train_step(cfg: ModelConfig, policy: PrecisionPolicy,
         metrics["params_finite"] = all_finite(new_params).astype(jnp.float32)
         return TrainState(new_params, new_opt), metrics
 
-    return train_step
+    from repro.core.dispatch import pin_backend
+
+    return pin_backend(train_step, tcfg.matmul_backend)
 
 
 def _batch_size(batch) -> int:

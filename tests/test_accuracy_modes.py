@@ -4,6 +4,10 @@ Pallas kernel agrees with the oracle under randomized tile configurations."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PrecisionMode, mp_matmul
