@@ -27,5 +27,15 @@ def v5e_roofline_us(flops: float, bytes_moved: float) -> float:
     return max(flops / PEAK_FLOPS_BF16, bytes_moved / HBM_BW) * 1e6
 
 
+_ROWS: list = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                  "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def rows() -> list:
+    """All rows emitted so far (benchmarks/run.py's JSON artifact sink)."""
+    return list(_ROWS)

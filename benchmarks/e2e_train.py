@@ -2,9 +2,8 @@
 different precision' claim on a real LM: train the same model under mode-2
 (M8), mode-3 (M16) and mode-4 (fp32-grade) policies and compare loss curves
 and per-step cost."""
-import numpy as np
 
-from benchmarks.common import emit, time_us
+from benchmarks.common import emit
 from repro.configs.registry import get_config
 from repro.core.policy import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLM

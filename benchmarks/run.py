@@ -1,10 +1,25 @@
 """Benchmark orchestrator — one module per paper table + accuracy + e2e +
-roofline.  Prints ``name,us_per_call,derived`` CSV."""
+roofline.  Prints ``name,us_per_call,derived`` CSV and writes the same rows
+to a ``BENCH_modes.json`` artifact (machine-readable perf trajectory: CI and
+the roofline notebooks diff these files across commits).
+
+    PYTHONPATH=src python -m benchmarks.run --json-out BENCH_modes.json
+"""
+import argparse
+import json
+import platform
+import sys
 
 
 def main() -> None:
-    from benchmarks import (accuracy, e2e_train, roofline, table2_multiplier,
-                            table3_fp_units, table4_comparison)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default="BENCH_modes.json",
+                    help="artifact path ('' disables the JSON sink)")
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, common, e2e_train, roofline,
+                            table2_multiplier, table3_fp_units,
+                            table4_comparison)
 
     print("name,us_per_call,derived")
     table2_multiplier.run()
@@ -13,6 +28,21 @@ def main() -> None:
     accuracy.run()
     e2e_train.run()
     roofline.run()
+
+    if args.json_out:
+        import jax
+
+        artifact = {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "rows": common.rows(),
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {len(common.rows())} rows -> {args.json_out}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

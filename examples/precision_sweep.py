@@ -7,7 +7,7 @@ import argparse
 import time
 
 from repro.configs.registry import get_config
-from repro.core.modes import MODE_TABLE, PrecisionMode
+import repro.mp as mp
 from repro.core.policy import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.optim import adamw
@@ -38,8 +38,9 @@ def main():
         t0 = time.perf_counter()
         _, hist = tr.run(pipe, num_steps=args.steps, log_every=0)
         dt = (time.perf_counter() - t0) / args.steps
-        passes = ("dyn" if pol.ffn == PrecisionMode.AUTO
-                  else str(MODE_TABLE[pol.ffn].n_products))
+        ffn = pol.mode("ffn")
+        passes = ("dyn" if mp.is_auto(ffn)
+                  else str(mp.resolve(ffn).n_products))
         print(f"{name:12s} {hist[-1]:10.4f} {dt:8.2f} {passes:>10s}")
 
 

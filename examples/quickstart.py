@@ -1,12 +1,12 @@
-"""Quickstart: the paper's 6 precision modes on a single matmul.
+"""Quickstart: the paper's 6 precision modes — plus a custom format — on a
+single matmul, through the ``repro.mp`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import PrecisionMode, mp_matmul
-from repro.core.auto import auto_report
+import repro.mp as mp
 from repro.core.limbs import dd_from_f64
 from repro.kernels.ref import matmul_golden_f64
 
@@ -16,29 +16,41 @@ b = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
 gold = matmul_golden_f64(a, b)
 gn = np.linalg.norm(gold)
 
-print("mode  bits  MXU-passes  rel-err (vs fp64)")
-for mode in (PrecisionMode.M8, PrecisionMode.M16, PrecisionMode.M23,
-             PrecisionMode.M36, PrecisionMode.M52):
-    out = mp_matmul(a, b, mode)
+print("format  bits  MXU-passes  rel-err (vs fp64)")
+for name in mp.available_formats():
+    fmt = mp.get_format(name)
+    out = mp.mp_matmul(a, b, fmt)
     rel = np.linalg.norm(np.asarray(out, np.float64) - gold) / gn
-    from repro.core.modes import MODE_TABLE
-    s = MODE_TABLE[mode]
-    print(f"{mode.name:5s} {s.mantissa_bits:4d}  {s.n_products:10d}  {rel:.3e}")
+    print(f"{fmt.name:6s} {fmt.mantissa_bits:4d}  {fmt.n_products:10d}  {rel:.3e}")
+
+# The mode table is OPEN: mint a paper-style custom width at run time.
+M30 = mp.register_format("M30", mantissa_bits=30, n_limbs=4, max_order=3)
+out = mp.mp_matmul(a, b, "M30")
+rel = np.linalg.norm(np.asarray(out, np.float64) - gold) / gn
+print(f"{M30.name:6s} {M30.mantissa_bits:4d}  {M30.n_products:10d}  {rel:.3e}"
+      "   <- registered at run time")
 
 # Mode 1 (AUTO): the controller inspects the operands.
 ints = jnp.asarray(rng.integers(-99, 99, (256, 512)), jnp.float32)
-print("\nAUTO on integer data:", auto_report(ints, ints)["selected_mode"])
-print("AUTO on float data:  ", auto_report(a, b)["selected_mode"])
-out_auto = mp_matmul(ints, ints.T.copy(), PrecisionMode.AUTO)
+print("\nAUTO on integer data:", mp.auto_report(ints, ints)["selected_format"])
+print("AUTO on float data:  ", mp.auto_report(a, b)["selected_format"])
+out_auto = mp.mp_matmul(ints, ints.T.copy(), mp.AUTO)
 exact = np.array_equal(np.asarray(out_auto),
                        np.asarray(ints, np.float64) @ np.asarray(ints.T,
                                                                  np.float64))
 print("AUTO integer product exact:", exact)
 
+# Scoped reconfiguration: backend + policy ride one explicit context.
+pol = mp.PrecisionPolicy({"moe_*": "M8", "lm_head": "M23", "*": "M16"})
+with mp.context(backend="ref", policy=pol):
+    ctx = mp.current_context()
+    print(f"\ncontext: backend={ctx.backend} "
+          f"ffn={pol.mode('ffn').name} lm_head={pol.mode('lm_head').name}")
+
 # Modes 5/6 with true >24-bit operands (two-float DD representation)
 a64 = rng.standard_normal((64, 64))
 b64 = rng.standard_normal((64, 64))
-dd_out = mp_matmul(dd_from_f64(a64), dd_from_f64(b64), PrecisionMode.M52)
+dd_out = mp.mp_matmul(dd_from_f64(a64), dd_from_f64(b64), "M52")
 rel = np.linalg.norm(np.asarray(dd_out, np.float64) - a64 @ b64) \
     / np.linalg.norm(a64 @ b64)
 print(f"\nM52 on 52-bit DD operands: rel-err {rel:.2e}")

@@ -30,6 +30,16 @@ def main():
         print(f"  decode throughput: {stats['tokens_per_s']:.0f} tok/s "
               f"({stats['ms_per_step']:.1f} ms/step, batch 4, CPU)")
 
+    # run-time policy hot-swap: the serving control plane ships a JSON policy
+    # (PrecisionPolicy.to_json wire format) and the engine re-points its
+    # jit'd steps — no engine rebuild, KV caches survive
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=64,
+                      policy=PrecisionPolicy.serve_default())
+    payload = PrecisionPolicy.full_fp32().to_json()
+    eng.set_policy(payload)
+    outs = eng.generate(prompts[:2], max_new=4)
+    print(f"after set_policy(full_fp32 JSON): {outs}")
+
 
 if __name__ == "__main__":
     main()

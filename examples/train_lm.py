@@ -29,7 +29,9 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config("paper-mpfp-100m", smoke=args.smoke)
-    seq = 33 if args.smoke else args.seq
+    # smoke seq must divide into the attention q-chunks (32, not 33: the
+    # model sees seq_len-1 tokens and chunked_attention asserts S % nq == 0)
+    seq = 32 if args.smoke else args.seq
     pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=seq + 1,
                                   global_batch=args.batch))
     tcfg = trainer_lib.TrainerConfig(

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 # ---- TPU v5e constants (per chip) ----------------------------------------
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s

@@ -11,7 +11,7 @@ runs only for the SSM/hybrid family; encoder-only archs have no decode step.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.configs.base import ModelConfig
 

@@ -1,15 +1,39 @@
 """Core MPFP library: the paper's run-time reconfigurable multi-precision
-multiplier as a composable JAX primitive.  See DESIGN.md §2."""
+multiplier as a composable JAX primitive.  See DESIGN.md §2/§5.
+
+Prefer the ``repro.mp`` facade for new code — it is the one-stop public API
+(format registry, PrecisionContext, policies, mp_matmul)."""
+from repro.core.formats import (  # noqa: F401
+    FormatLike,
+    MPFormat,
+    PrecisionMode,
+    available_formats,
+    get_format,
+    is_auto,
+    register_format,
+    resolve,
+    unregister_format,
+)
 from repro.core.modes import (  # noqa: F401
     MODE_TABLE,
     ModeSpec,
-    PrecisionMode,
     STATIC_MODES,
     mode_for_limbs,
     spec,
     validate_mode_pair,
 )
 from repro.core.limbs import DD, decompose, decompose_dd, reconstruct  # noqa: F401
+from repro.core.context import (  # noqa: F401
+    DEFAULT_AUTO_CANDIDATES,
+    PrecisionContext,
+    configure,
+    current_context,
+    default_context,
+    reset_context,
+)
+# NB: ``context`` (the scoping helper) is deliberately not re-exported here —
+# binding it on the package would shadow the ``repro.core.context`` submodule
+# attribute.  Use ``repro.mp.context`` (the facade) instead.
 from repro.core.mpmatmul import (  # noqa: F401
     mp_dense,
     mp_matmul,

@@ -11,6 +11,10 @@ rule).
 ``lax.switch`` compiles all candidate branches — the hardware parallel of the
 paper instantiating all multiplier units — but executes only the selected one
 ("only the selected multiplier unit will be in ON state").
+
+The candidate set and analysis tolerance default to the active
+:class:`~repro.core.context.PrecisionContext` (``auto_candidates`` /
+``auto_tol``); candidates may include run-time-registered custom formats.
 """
 from __future__ import annotations
 
@@ -21,33 +25,48 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import context as context_lib
 from repro.core import limbs as limbs_lib
-from repro.core.modes import MODE_TABLE, PrecisionMode
+from repro.core.context import DEFAULT_AUTO_CANDIDATES
+from repro.core.formats import FormatLike, resolve
 
-# default candidate set: the fp32-representable modes
-DEFAULT_CANDIDATES: Tuple[PrecisionMode, ...] = (
-    PrecisionMode.M8,
-    PrecisionMode.M16,
-    PrecisionMode.M23,
-)
+# back-compat alias (v1 exposed the default candidate set from this module)
+DEFAULT_CANDIDATES: Tuple = DEFAULT_AUTO_CANDIDATES
+
+
+def _candidates_and_tol(candidates, tol):
+    ctx = context_lib.current_context()
+    if candidates is None:
+        candidates = ctx.auto_candidates
+    if tol is None:
+        tol = ctx.auto_tol
+    return tuple(candidates), float(tol)
 
 
 def select_mode_index(
     a: jax.Array,
     b: jax.Array,
-    candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES,
+    candidates: Optional[Sequence[FormatLike]] = None,
     *,
-    tol: float = 2.0**-13,
+    tol: Optional[float] = None,
 ) -> jax.Array:
-    """Traced int32 index into ``candidates`` — the mode-select controller."""
-    max_limbs = max(MODE_TABLE[m].n_limbs for m in candidates)
+    """Traced int32 index into ``candidates`` (the caller's order) — the
+    mode-select controller.  The cheapest adequate candidate wins regardless
+    of how the caller ordered the sequence."""
+    candidates, tol = _candidates_and_tol(candidates, tol)
+    specs = [resolve(c) for c in candidates]
+    max_limbs = max(s.n_limbs for s in specs)
     ka = limbs_lib.significant_limbs(a, tol=tol, max_limbs=max_limbs)
     kb = limbs_lib.significant_limbs(b, tol=tol, max_limbs=max_limbs)
     k = jnp.maximum(ka, kb)  # consensus: the wider requirement wins
-    # map required limb count -> first candidate with n_limbs >= k
-    idx = jnp.int32(len(candidates) - 1)
-    for i in range(len(candidates) - 1, -1, -1):
-        enough = jnp.int32(MODE_TABLE[candidates[i]].n_limbs) >= k
+    # scan candidates from most to least expensive, keeping the last (=
+    # cheapest) adequate one; ``by_cost`` holds *original* indices, so the
+    # returned index maps into the caller's sequence
+    by_cost = sorted(range(len(specs)),
+                     key=lambda i: (specs[i].n_limbs, specs[i].n_products))
+    idx = jnp.int32(by_cost[-1])  # fallback: the widest candidate
+    for i in reversed(by_cost):
+        enough = jnp.int32(specs[i].n_limbs) >= k
         idx = jnp.where(enough, jnp.int32(i), idx)
     return idx
 
@@ -55,23 +74,28 @@ def select_mode_index(
 def mp_matmul_auto(
     a: jax.Array,
     b: jax.Array,
-    candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES,
+    candidates: Optional[Sequence[FormatLike]] = None,
     *,
     backend: Optional[str] = None,
     out_dtype=jnp.float32,
-    bwd_mode: Optional[PrecisionMode] = None,
-    tol: float = 2.0**-13,
+    bwd_mode: Optional[FormatLike] = None,
+    dgrad_mode: Optional[FormatLike] = None,
+    wgrad_mode: Optional[FormatLike] = None,
+    tol: Optional[float] = None,
 ) -> jax.Array:
     """Run-time reconfigurable matmul: analyze -> switch -> one branch runs."""
     from repro.core import mpmatmul  # circular-import avoidance
 
+    candidates, tol = _candidates_and_tol(candidates, tol)
     idx = select_mode_index(a, b, candidates, tol=tol)
 
     branches = [
         functools.partial(
             mpmatmul.mp_matmul,
-            mode=m,
+            mode=resolve(m),
             bwd_mode=bwd_mode,
+            dgrad_mode=dgrad_mode,
+            wgrad_mode=wgrad_mode,
             backend=backend,
             out_dtype=out_dtype,
         )
@@ -81,15 +105,28 @@ def mp_matmul_auto(
 
 
 def auto_report(a: jax.Array, b: jax.Array,
-                candidates: Sequence[PrecisionMode] = DEFAULT_CANDIDATES):
-    """Debug/observability helper: which mode would AUTO pick and why."""
-    idx = int(select_mode_index(a, b, candidates))
+                candidates: Optional[Sequence[FormatLike]] = None,
+                *,
+                tol: Optional[float] = None):
+    """Debug/observability helper: which mode would AUTO pick and why.
+
+    ``tol`` flows through to the same ``significant_limbs`` analysis the
+    selection used, so the reported limb counts explain the selected mode
+    even under a non-default tolerance."""
+    candidates, tol = _candidates_and_tol(candidates, tol)
+    idx = int(select_mode_index(a, b, candidates, tol=tol))
     mode = candidates[idx]
+    fmt = resolve(mode)
+    max_limbs = max(resolve(c).n_limbs for c in candidates)
     return {
         "selected_mode": mode,
-        "mode_bits": mode.mode_bits,
-        "sig_limbs_a": int(limbs_lib.significant_limbs(a)),
-        "sig_limbs_b": int(limbs_lib.significant_limbs(b)),
+        "selected_format": fmt.name,
+        "mode_bits": fmt.mode_bits,
+        "tol": tol,
+        "sig_limbs_a": int(limbs_lib.significant_limbs(
+            a, tol=tol, max_limbs=max_limbs)),
+        "sig_limbs_b": int(limbs_lib.significant_limbs(
+            b, tol=tol, max_limbs=max_limbs)),
         "residual_a_1limb": float(limbs_lib.residual_scale(a, 1)),
         "residual_b_1limb": float(limbs_lib.residual_scale(b, 1)),
     }

@@ -1,0 +1,198 @@
+"""Explicit precision context — run-time reconfiguration as a first-class,
+serializable object instead of module globals and env vars.
+
+The follow-up matrix-multiplier IP paper (arXiv:1910.05100) exposes the mode
+register as an addressable runtime interface; :class:`PrecisionContext` is
+that register for this framework.  It carries everything that used to hide in
+process state — the dispatch backend, the active policy, the AUTO candidate
+set and tolerance, the autotune flag, the matmul mesh — and is:
+
+  * **thread- and task-safe**: scoped overrides ride a ``contextvars``
+    ContextVar, so concurrent serving threads can trace under different
+    precision configurations without racing a module global;
+  * **explicit**: ``mp.configure(...)`` replaces the *process default*;
+    ``with mp.context(...)`` pushes a scoped override (trace-time — wrap the
+    jit call, not the step);
+  * **serializable**: ``to_json``/``from_json`` round-trip (mesh excluded —
+    device topology is process-local by nature).
+
+The v1 surface (``set_default_backend``, ``use_backend``, ``pin_backend``,
+``REPRO_MP_BACKEND``/``REPRO_MP_AUTOTUNE``) survives as deprecated shims that
+populate this default context (core/dispatch.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import json
+import os
+from typing import Any, Optional, Tuple, Union
+
+from repro.core import formats
+from repro.core.formats import FormatLike, PrecisionMode, resolve
+from repro.core.policy import PrecisionPolicy
+
+# default AUTO candidate set: the fp32-representable built-in modes
+DEFAULT_AUTO_CANDIDATES: Tuple[PrecisionMode, ...] = (
+    PrecisionMode.M8,
+    PrecisionMode.M16,
+    PrecisionMode.M23,
+)
+
+_UNSET = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionContext:
+    """One snapshot of the runtime precision configuration (the paper's mode
+    register, framework-wide)."""
+
+    backend: str = "ref"
+    policy: Optional[PrecisionPolicy] = None
+    auto_candidates: Tuple[FormatLike, ...] = DEFAULT_AUTO_CANDIDATES
+    auto_tol: float = 2.0**-13
+    # tri-state: None = "not configured" -> the deprecated REPRO_MP_AUTOTUNE
+    # env var is consulted live (v1 read it per call); an explicit True/False
+    # set via configure()/context() always wins over the env shim
+    autotune: Optional[bool] = None
+    mesh: Any = None  # default mesh for the sharded backend (process-local)
+
+    def replace(self, **kw) -> "PrecisionContext":
+        return dataclasses.replace(self, **kw)
+
+    # ---- wire format (mesh excluded: not serializable by design) ----------
+    def to_json(self) -> str:
+        # custom formats among the AUTO candidates ship their definitions, so
+        # the payload hydrates in a process that never registered them (the
+        # policy's JSON embeds its own referenced formats the same way)
+        names = [resolve(c).name for c in self.auto_candidates]
+        return json.dumps({
+            "backend": self.backend,
+            "policy": None if self.policy is None
+            else json.loads(self.policy.to_json()),
+            "auto_candidates": names,
+            "formats": formats.collect_defs(names),
+            "auto_tol": self.auto_tol,
+            "autotune": self.autotune,
+        }, indent=1)
+
+    # (from_json below validates hydrated payloads with the same _validate
+    # that configure()/context() apply, so a bad wire context fails at parse
+    # time, not at the first dispatch.)
+
+    @classmethod
+    def from_json(cls, payload: Union[str, bytes, dict]) -> "PrecisionContext":
+        obj = json.loads(payload) if isinstance(payload, (str, bytes)) \
+            else payload
+        formats.register_defs(obj.get("formats"))
+        policy = obj.get("policy")
+        backend = obj.get("backend", "ref")
+        candidates = tuple(obj.get("auto_candidates")
+                           or DEFAULT_AUTO_CANDIDATES)
+        _validate({"backend": backend, "auto_candidates": candidates})
+        autotune = obj.get("autotune")
+        return cls(
+            backend=backend,
+            policy=None if policy is None
+            else PrecisionPolicy.from_json(policy),
+            auto_candidates=candidates,
+            auto_tol=float(obj.get("auto_tol", 2.0**-13)),
+            autotune=None if autotune is None else bool(autotune),
+        )
+
+
+# ---------------------------------------------------------------------------
+# the two-level store: a process default + a ContextVar override stack
+# ---------------------------------------------------------------------------
+_process_default: Optional[PrecisionContext] = None
+_scoped: contextvars.ContextVar[Optional[PrecisionContext]] = \
+    contextvars.ContextVar("repro_mp_context", default=None)
+
+
+def _env_default() -> PrecisionContext:
+    """Deprecated env-var shims populate the initial default context.
+
+    REPRO_MP_AUTOTUNE is deliberately NOT snapshotted here — autotune stays
+    None ("not configured") so :func:`autotune_enabled` keeps reading the env
+    var live, matching v1's per-call semantics until someone configures the
+    flag explicitly."""
+    return PrecisionContext(
+        backend=os.environ.get("REPRO_MP_BACKEND", "ref"),
+    )
+
+
+def default_context() -> PrecisionContext:
+    global _process_default
+    if _process_default is None:
+        _process_default = _env_default()
+    return _process_default
+
+
+def current_context() -> PrecisionContext:
+    """The active context: innermost ``with mp.context(...)`` scope, else the
+    process default (``mp.configure``, else env shims, else factory)."""
+    scoped = _scoped.get()
+    return scoped if scoped is not None else default_context()
+
+
+def _validate(kw) -> None:
+    backend = kw.get("backend", _UNSET)
+    if backend is not _UNSET:
+        from repro.core import dispatch  # lazy: dispatch imports this module
+
+        if not backend or backend not in dispatch.available_backends():
+            raise ValueError(f"unknown backend {backend!r}; have "
+                             f"{dispatch.available_backends()}")
+    cands = kw.get("auto_candidates", _UNSET)
+    if cands is not _UNSET:
+        if not cands:
+            raise ValueError("auto_candidates must name at least one format")
+        for cand in cands:
+            # AUTO cannot be its own candidate: select_mode_index needs
+            # static formats to rank by limb count — resolve() raises on both
+            # AUTO and unknown names, at configure time rather than deep
+            # inside tracing
+            resolve(cand)
+
+
+def configure(**kw) -> PrecisionContext:
+    """Replace fields of the *process-default* context (the serving/training
+    launcher's one-shot setup).  Returns the new default."""
+    global _process_default
+    _validate(kw)
+    _process_default = default_context().replace(**kw)
+    return _process_default
+
+
+@contextlib.contextmanager
+def context(**kw):
+    """Scoped override of the current context (thread-/async-safe).
+
+    Trace-time: wrap the ``jax.jit`` *trace* (first call), not the step —
+    backend and policy are baked into the trace, matching v1 ``use_backend``
+    semantics."""
+    _validate(kw)
+    new = current_context().replace(**kw)
+    token = _scoped.set(new)
+    try:
+        yield new
+    finally:
+        _scoped.reset(token)
+
+
+def autotune_enabled() -> bool:
+    """The effective autotune switch for dispatch: an explicitly configured
+    context flag wins; otherwise the deprecated REPRO_MP_AUTOTUNE env var is
+    read live (v1 consulted it on every call, so flipping it mid-process
+    must keep working until the shim is retired)."""
+    flag = current_context().autotune
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_MP_AUTOTUNE", "") == "1"
+
+
+def reset_context() -> None:
+    """Drop the process default (tests; next read rebuilds from env shims)."""
+    global _process_default
+    _process_default = None

@@ -22,70 +22,80 @@ partition-invariant: the Neumaier combine sees the same per-order totals a
 single device would, so shard count never changes which rounding the result
 absorbs beyond fp32 psum reassociation.
 
+Backends are keyed by :class:`repro.core.formats.MPFormat` (run-time
+registered formats route identically to the paper's built-ins), and the
+default backend / autotune flag / default mesh come from the active
+:class:`repro.core.context.PrecisionContext` — there is no module-level
+mutable backend state.  The v1 global-flavored helpers below
+(``set_default_backend``, ``use_backend``) are deprecated shims over the
+context.
+
 The custom VJP lives one level up (core/mpmatmul.py) and treats every backend
-uniformly — backward passes re-enter ``dispatch`` at ``bwd_mode``.
+uniformly — backward passes re-enter ``dispatch`` at their bwd formats.
 """
 from __future__ import annotations
 
 import contextlib
-import os
+import warnings
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import context as context_lib
+from repro.core.formats import FormatLike, MPFormat, resolve
 from repro.core.limbs import DD
-from repro.core.modes import PrecisionMode
 from repro.kernels import ref as ref_backend
 
 Operand = Union[jax.Array, DD]
 
 BACKENDS = ("ref", "pallas", "pallas_interpret", "sharded")
 
-_DEFAULT_BACKEND = os.environ.get("REPRO_MP_BACKEND", "ref")
-_AUTOTUNE_ENV = "REPRO_MP_AUTOTUNE"
-
 
 # ---------------------------------------------------------------------------
-# default-backend plumbing
+# default-backend plumbing — deprecated shims over the PrecisionContext
 # ---------------------------------------------------------------------------
 def set_default_backend(name: str) -> None:
-    global _DEFAULT_BACKEND
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
-    _DEFAULT_BACKEND = name
+    """Deprecated: use ``mp.configure(backend=...)``.  Mutates the process-
+    default context (kept so v1 launchers keep working)."""
+    warnings.warn("set_default_backend is deprecated; use "
+                  "repro.mp.configure(backend=...)", DeprecationWarning,
+                  stacklevel=2)
+    context_lib.configure(backend=name)
 
 
 def get_default_backend() -> str:
-    return _DEFAULT_BACKEND
+    """The active context's backend (scoped override, else process default)."""
+    return context_lib.current_context().backend
 
 
 @contextlib.contextmanager
 def use_backend(name: str):
-    """Scoped default backend (trace-time: wrap the jit call, not the step)."""
-    prev = get_default_backend()
-    set_default_backend(name)
-    try:
-        yield
-    finally:
-        set_default_backend(prev)
+    """Deprecated: use ``with mp.context(backend=...)`` (trace-time: wrap the
+    jit call, not the step)."""
+    warnings.warn("use_backend is deprecated; use "
+                  "repro.mp.context(backend=...)", DeprecationWarning,
+                  stacklevel=3)
+    with context_lib.context(backend=name) as ctx:
+        yield ctx
 
 
 # ---------------------------------------------------------------------------
 # backends
 # ---------------------------------------------------------------------------
-def _run_ref(a: Operand, b: Operand, mode: PrecisionMode, out_dtype):
-    return ref_backend.mp_matmul_ref(a, b, mode, out_dtype=out_dtype)
+def _run_ref(a: Operand, b: Operand, fmt: MPFormat, out_dtype):
+    return ref_backend.mp_matmul_ref(a, b, fmt, out_dtype=out_dtype)
 
 
-def _tuned_blocks(a: Operand, b: Operand, mode: PrecisionMode, interpret: bool
+def _tuned_blocks(a: Operand, b: Operand, fmt: MPFormat, interpret: bool
                   ) -> Tuple[Optional[int], Optional[int], Optional[int]]:
     """Autotune-table lookup for the shape ops.mp_matmul_pallas will run.
 
     Mirrors the ops layer's batch folding: an a-batched × 2-D b contraction
-    folds the batch into M.  Sweeps happen only under REPRO_MP_AUTOTUNE=1 —
-    otherwise this is a pure table read (cold processes never stall)."""
+    folds the batch into M.  Sweeps happen only when the active context's
+    ``autotune`` flag is set (env shim: REPRO_MP_AUTOTUNE=1) — otherwise this
+    is a pure table read (cold processes never stall)."""
     if isinstance(a, DD) or isinstance(b, DD):
         return None, None, None
     if b.ndim != 2:
@@ -96,26 +106,26 @@ def _tuned_blocks(a: Operand, b: Operand, mode: PrecisionMode, interpret: bool
     for d in a.shape[:-1]:
         M *= d
     K, N = b.shape
-    if os.environ.get(_AUTOTUNE_ENV, "") == "1":
-        bm, bk, bn = autotune.autotune(M, K, N, mode, dtype=jnp.float32,
+    if context_lib.autotune_enabled():
+        bm, bk, bn = autotune.autotune(M, K, N, fmt, dtype=jnp.float32,
                                        interpret=interpret)
         return bm, bk, bn
-    blocks = autotune.lookup(M, K, N, mode)
+    blocks = autotune.lookup(M, K, N, fmt)
     return blocks if blocks is not None else (None, None, None)
 
 
-def _run_pallas(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+def _run_pallas(a: Operand, b: Operand, fmt: MPFormat, out_dtype,
                 *, interpret: bool):
     from repro.kernels import ops as pallas_backend  # deferred: imports pallas
 
     interpret = interpret or jax.default_backend() == "cpu"
-    bm, bk, bn = _tuned_blocks(a, b, mode, interpret)
+    bm, bk, bn = _tuned_blocks(a, b, fmt, interpret)
     return pallas_backend.mp_matmul_pallas(
-        a, b, mode, out_dtype=out_dtype, interpret=interpret,
+        a, b, fmt, out_dtype=out_dtype, interpret=interpret,
         bm=bm, bk=bk, bn=bn)
 
 
-def _sharded_2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
+def _sharded_2d(a: jax.Array, b: jax.Array, fmt: MPFormat, out_dtype,
                 mesh, axis: str) -> jax.Array:
     n = mesh.shape[axis]
     K = a.shape[1]
@@ -127,7 +137,7 @@ def _sharded_2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
         b = jnp.pad(b, [(0, pad), (0, 0)])
 
     def local(a_loc: jax.Array, b_loc: jax.Array) -> jax.Array:
-        partials = ref_backend.mp_matmul_partials(a_loc, b_loc, mode)
+        partials = ref_backend.mp_matmul_partials(a_loc, b_loc, fmt)
         return jax.lax.psum(partials, axis)  # (n_orders, M, N), ONE collective
 
     partials = jax.shard_map(
@@ -136,7 +146,7 @@ def _sharded_2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
         out_specs=P(None, None, None),
         check_vma=False,
     )(a, b)
-    return ref_backend.combine_partials(partials, mode, out_dtype=out_dtype)
+    return ref_backend.combine_partials(partials, fmt, out_dtype=out_dtype)
 
 
 def _bound_axis_names() -> Tuple:
@@ -155,40 +165,53 @@ def _bound_axis_names() -> Tuple:
         return ()
 
 
-def _run_sharded(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+def _run_sharded(a: Operand, b: Operand, fmt: MPFormat, out_dtype,
                  *, mesh=None, axis: str = "data"):
     """K-sharded multi-device path; falls back to ref where sharding the
     contraction cannot help (DD operands, both-batched einsums, 1 device)
-    or cannot work (already inside a shard_map scope)."""
+    or cannot work (already inside a shard_map scope).  The mesh comes from
+    the call, else the active context, else the default 1-D matmul mesh."""
     if isinstance(a, DD) or isinstance(b, DD) or b.ndim != 2:
-        return _run_ref(a, b, mode, out_dtype)
+        return _run_ref(a, b, fmt, out_dtype)
     if _bound_axis_names():
-        return _run_ref(a, b, mode, out_dtype)
+        return _run_ref(a, b, fmt, out_dtype)
+    if mesh is None:
+        mesh = context_lib.current_context().mesh
     if mesh is None:
         from repro.launch import mesh as mesh_lib  # deferred: device init
 
         mesh = mesh_lib.make_matmul_mesh(axis=axis)
+    if axis not in mesh.shape:
+        if len(mesh.shape) == 1:
+            # a 1-D mesh under any axis name IS a matmul mesh: use its axis
+            # rather than silently degrading to single-device compute
+            axis = next(iter(mesh.shape))
+        else:
+            raise ValueError(
+                f"sharded backend needs a 1-D mesh or an axis named "
+                f"{axis!r}; the configured mesh has axes "
+                f"{tuple(mesh.shape)}")
     if mesh.shape[axis] == 1:
-        return _run_ref(a, b, mode, out_dtype)
+        return _run_ref(a, b, fmt, out_dtype)
     lead = a.shape[:-1]
-    out = _sharded_2d(a.reshape(-1, a.shape[-1]), b, mode, out_dtype,
+    out = _sharded_2d(a.reshape(-1, a.shape[-1]), b, fmt, out_dtype,
                       mesh, axis)
     return out.reshape(tuple(lead) + (b.shape[-1],))
 
 
 _REGISTRY: Dict[str, Callable] = {
-    "ref": lambda a, b, mode, out_dtype: _run_ref(a, b, mode, out_dtype),
-    "pallas": lambda a, b, mode, out_dtype: _run_pallas(
-        a, b, mode, out_dtype, interpret=False),
-    "pallas_interpret": lambda a, b, mode, out_dtype: _run_pallas(
-        a, b, mode, out_dtype, interpret=True),
-    "sharded": lambda a, b, mode, out_dtype: _run_sharded(
-        a, b, mode, out_dtype),
+    "ref": lambda a, b, fmt, out_dtype: _run_ref(a, b, fmt, out_dtype),
+    "pallas": lambda a, b, fmt, out_dtype: _run_pallas(
+        a, b, fmt, out_dtype, interpret=False),
+    "pallas_interpret": lambda a, b, fmt, out_dtype: _run_pallas(
+        a, b, fmt, out_dtype, interpret=True),
+    "sharded": lambda a, b, fmt, out_dtype: _run_sharded(
+        a, b, fmt, out_dtype),
 }
 
 
 def register_backend(name: str, fn: Callable) -> None:
-    """Extension point: fn(a, b, mode, out_dtype) -> (..., M, N) array.
+    """Extension point: fn(a, b, fmt: MPFormat, out_dtype) -> (..., M, N).
 
     Built-in names are reserved — overwriting "ref" would silently reroute
     every oracle comparison in the process with no way back."""
@@ -204,7 +227,7 @@ def unregister_backend(name: str) -> None:
 
 
 def pin_backend(fn: Callable, backend: Optional[str]) -> Callable:
-    """Wrap ``fn`` so its (re)traces run under ``use_backend(backend)``.
+    """Wrap ``fn`` so its (re)traces run under ``mp.context(backend=...)``.
 
     The backend is read at *trace* time, so the context must be live while
     tracing — wrapping the jit-decorated callable's body (this) works;
@@ -214,7 +237,7 @@ def pin_backend(fn: Callable, backend: Optional[str]) -> Callable:
         return fn
 
     def wrapped(*args, **kwargs):
-        with use_backend(backend):
+        with context_lib.context(backend=backend):
             return fn(*args, **kwargs)
 
     return wrapped
@@ -227,15 +250,16 @@ def available_backends() -> Tuple[str, ...]:
 def dispatch(
     a: Operand,
     b: Operand,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     backend: Optional[str] = None,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """Route one static-mode matmul to a backend (the single funnel every
-    forward/backward limb contraction passes through)."""
-    name = backend or _DEFAULT_BACKEND
+    """Route one static-format matmul to a backend (the single funnel every
+    forward/backward limb contraction passes through).  ``mode`` may be an
+    MPFormat, a registered format name, or a legacy PrecisionMode."""
+    name = backend or context_lib.current_context().backend
     fn = _REGISTRY.get(name)
     if fn is None:
         raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
-    return fn(a, b, PrecisionMode(mode), out_dtype)
+    return fn(a, b, resolve(mode), out_dtype)

@@ -1,4 +1,6 @@
-"""Precision modes — the paper's 6 run-time-selectable multiplier configurations.
+"""Back-compat view of the paper's 6 precision modes over the open format
+registry (core/formats.py) — kept so v1 call sites and the paper mapping stay
+readable.
 
 Paper mapping (Arish & Sharma 2019, Table I):
     Mode 1 (000) AUTO  -> operand analysis selects among the static modes
@@ -8,124 +10,62 @@ Paper mapping (Arish & Sharma 2019, Table I):
     Mode 5 (100) M36   -> 36-bit mantissa  -> 5 limbs, 15 passes
     Mode 6 (101) M52   -> 52-bit mantissa  -> 7 limbs, 28 passes (fp64-equivalent)
 
-A bf16 limb carries ~8 mantissa bits (7 stored + hidden 1) with full fp32 exponent
-range, so "mantissa bits" quantize to multiples of 8 on TPU.  The order cut drops
-limb products ``li*mj`` with ``i + j > max_order`` — the Karatsuba economy (for two
-limbs: keep hh, hl, lh; drop ll -> 3 multiplies instead of 4).
+A bf16 limb carries ~8 mantissa bits (7 stored + hidden 1) with full fp32
+exponent range, so "mantissa bits" quantize to multiples of 8 on TPU.  The
+order cut drops limb products ``li*mj`` with ``i + j > max_order`` — the
+Karatsuba economy (for two limbs: keep hh, hl, lh; drop ll -> 3 multiplies
+instead of 4).
+
+New code should use the ``repro.mp`` facade: ``mp.register_format`` mints
+formats beyond this table, and ``mp.resolve`` canonicalizes any spelling.
 """
 from __future__ import annotations
 
-import dataclasses
-import enum
-from typing import Tuple
+from repro.core.formats import (  # noqa: F401  (re-exported back-compat API)
+    FormatLike,
+    MPFormat,
+    PrecisionMode,
+    available_formats,
+    get_format,
+    is_auto,
+    register_format,
+    resolve,
+    unregister_format,
+)
 
+# v1 name for the format dataclass (``ModeSpec`` fields are a subset of
+# ``MPFormat``'s; the ``mode`` attribute is now a derived property).
+ModeSpec = MPFormat
 
-class PrecisionMode(enum.IntEnum):
-    """Run-time selectable precision mode (paper Table I)."""
-
-    AUTO = 0  # paper mode 1 (000)
-    M8 = 1    # paper mode 2 (001)
-    M16 = 2   # paper mode 3 (010)
-    M23 = 3   # paper mode 4 (011)
-    M36 = 4   # paper mode 5 (100)
-    M52 = 5   # paper mode 6 (101)
-
-    @property
-    def mode_bits(self) -> str:
-        """The 3 mode-select bits from the paper's 67-bit operand format."""
-        return format(int(self), "03b")
-
-
-@dataclasses.dataclass(frozen=True)
-class ModeSpec:
-    """Static configuration of one precision mode."""
-
-    mode: PrecisionMode
-    mantissa_bits: int      # paper's nominal mantissa width
-    n_limbs: int            # bf16 limbs per operand
-    max_order: int          # keep limb products with i + j <= max_order
-    # relative-error budget asserted by tests (empirically calibrated, see
-    # tests/test_accuracy_modes.py; modes >=M36 are bounded by compensated fp32
-    # accumulation, not by the nominal mantissa width — see DESIGN.md §2)
-    rel_err_bound: float = 0.0
-
-    @property
-    def n_products(self) -> int:
-        """Number of MXU passes = |{(i,j): i,j < n_limbs, i+j <= max_order}|."""
-        return sum(
-            1
-            for i in range(self.n_limbs)
-            for j in range(self.n_limbs)
-            if i + j <= self.max_order
-        )
-
-    @property
-    def n_orders(self) -> int:
-        """Number of distinct limb-product orders (= max_order + 1).
-
-        This is the payload multiplier of the sharded backend's cross-device
-        reduce: per-order partials are accumulated locally and reduced as one
-        (n_orders, M, N) fp32 stack so the compensated combine happens once,
-        after the reduce (DESIGN.md §5).  Low modes therefore cut
-        communication bytes, not just MXU passes: M8 ships 1×MN, M52 7×MN —
-        versus n_products×MN (up to 28×) if each limb product were reduced
-        separately."""
-        return self.max_order + 1
-
-    @property
-    def products(self) -> Tuple[Tuple[int, int], ...]:
-        """The kept (i, j) limb-product index pairs, sorted by descending order
-
-        (highest order first so accumulation runs small-magnitude -> large,
-        the carry-save-adder analogue, see DESIGN.md)."""
-        pairs = [
-            (i, j)
-            for i in range(self.n_limbs)
-            for j in range(self.n_limbs)
-            if i + j <= self.max_order
-        ]
-        return tuple(sorted(pairs, key=lambda p: -(p[0] + p[1])))
-
-    @property
-    def flops_factor(self) -> float:
-        """FLOP multiplier relative to a single bf16 matmul of the same shape."""
-        return float(self.n_products)
-
-
-# The static mode table.  AUTO is not here: it resolves to one of these.
+# The static mode table, keyed by the paper enum.  These are *views* of the
+# registry's built-in entries — ``MODE_TABLE[M16] is resolve("M16")``.
 MODE_TABLE = {
-    PrecisionMode.M8: ModeSpec(PrecisionMode.M8, 8, 1, 0, rel_err_bound=2.0**-6),
-    PrecisionMode.M16: ModeSpec(PrecisionMode.M16, 16, 2, 1, rel_err_bound=2.0**-13),
-    PrecisionMode.M23: ModeSpec(PrecisionMode.M23, 23, 3, 2, rel_err_bound=2.0**-19),
-    PrecisionMode.M36: ModeSpec(PrecisionMode.M36, 36, 5, 4, rel_err_bound=2.0**-22),
-    PrecisionMode.M52: ModeSpec(PrecisionMode.M52, 52, 7, 6, rel_err_bound=2.0**-22),
+    m: get_format(m.name) for m in PrecisionMode if m != PrecisionMode.AUTO
 }
 
 STATIC_MODES = tuple(MODE_TABLE)  # ordered M8..M52 (ascending cost)
 
 
-def spec(mode: PrecisionMode) -> ModeSpec:
-    if mode == PrecisionMode.AUTO:
-        raise ValueError(
-            "AUTO is a dispatch mode, not a static spec; resolve it first "
-            "(core.auto.select_mode) or call mp_matmul_auto."
-        )
-    return MODE_TABLE[PrecisionMode(mode)]
+def spec(mode: FormatLike) -> MPFormat:
+    """v1 accessor: resolve a mode/name/format to its MPFormat (AUTO raises)."""
+    return resolve(mode)
 
 
 def mode_for_limbs(n_limbs: int) -> PrecisionMode:
-    """Smallest mode whose limb count covers ``n_limbs`` significant limbs."""
+    """Smallest built-in mode whose limb count covers ``n_limbs`` significant
+    limbs (AUTO's built-in ladder; custom formats opt in via candidates)."""
     for m in STATIC_MODES:
         if MODE_TABLE[m].n_limbs >= n_limbs:
             return m
     return PrecisionMode.M52
 
 
-def validate_mode_pair(mode_a: PrecisionMode, mode_b: PrecisionMode) -> PrecisionMode:
+def validate_mode_pair(mode_a: FormatLike, mode_b: FormatLike) -> FormatLike:
     """Paper: 'mode select bits for both inputs must be the same, otherwise a
     mode select error signal will be generated'.  Tensor-granularity analogue:
     both operands must carry the same requested mode."""
-    if mode_a != mode_b:
+    if is_auto(mode_a) != is_auto(mode_b) or (
+            not is_auto(mode_a) and resolve(mode_a) != resolve(mode_b)):
         raise ValueError(
             f"mode-select error: operand modes disagree ({mode_a!r} vs {mode_b!r})"
         )

@@ -2,9 +2,12 @@
 composable JAX primitive.
 
 ``mp_matmul(a, b, mode)`` is the single entry point every layer in the
-framework uses for dense contractions.  It is differentiable (custom VJP whose
-backward passes may run at a *different* mode — production mixed-precision
-recipes usually give wgrad/dgrad more bits than fwd), batched, and
+framework uses for dense contractions.  ``mode`` is anything
+:func:`repro.core.formats.resolve` accepts — a built-in or run-time-registered
+:class:`MPFormat`, its name string, or a legacy ``PrecisionMode``.  It is
+differentiable (custom VJP whose backward passes may run at *different*
+formats — production mixed-precision recipes usually give wgrad/dgrad more
+bits than fwd, and they may differ from each other), batched, and
 backend-switchable through the unified dispatch layer (core/dispatch.py,
 DESIGN.md §5):
 
@@ -15,8 +18,9 @@ DESIGN.md §5):
                               per-order psum, combine after the reduce)
 
 The mode-split is preserved across every backend: the custom VJP wraps the
-dispatch call, so forward and backward can run different modes on different
-backends through one code path.
+dispatch call, so forward, dgrad, and wgrad can run three different formats
+on different backends through one code path.  The default backend comes from
+the active :class:`~repro.core.context.PrecisionContext` at trace time.
 """
 from __future__ import annotations
 
@@ -26,46 +30,49 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from repro.core import context as context_lib
 from repro.core import dispatch as dispatch_lib
 from repro.core.dispatch import (  # noqa: F401  (re-exported public API)
     get_default_backend,
     set_default_backend,
     use_backend,
 )
+from repro.core.formats import FormatLike, is_auto, resolve
 from repro.core.limbs import DD
-from repro.core.modes import PrecisionMode, spec as mode_spec
+from repro.core.modes import PrecisionMode
 
 Operand = Union[jax.Array, DD]
 
 
-def _run(a: Operand, b: Operand, mode: PrecisionMode, backend: Optional[str],
+def _run(a: Operand, b: Operand, fmt, backend: Optional[str],
          out_dtype) -> jax.Array:
-    return dispatch_lib.dispatch(a, b, mode, backend=backend,
+    return dispatch_lib.dispatch(a, b, fmt, backend=backend,
                                  out_dtype=out_dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _mp_matmul_diff(a, b, mode, bwd_mode, backend, out_dtype):
-    return _run(a, b, mode, backend, out_dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _mp_matmul_diff(a, b, fmt, dgrad_fmt, wgrad_fmt, backend, out_dtype):
+    return _run(a, b, fmt, backend, out_dtype)
 
 
-def _fwd(a, b, mode, bwd_mode, backend, out_dtype):
-    return _run(a, b, mode, backend, out_dtype), (a, b)
+def _fwd(a, b, fmt, dgrad_fmt, wgrad_fmt, backend, out_dtype):
+    return _run(a, b, fmt, backend, out_dtype), (a, b)
 
 
-def _bwd(mode, bwd_mode, backend, out_dtype, res, g):
+def _bwd(fmt, dgrad_fmt, wgrad_fmt, backend, out_dtype, res, g):
     a, b = res
-    bm = bwd_mode if bwd_mode is not None else mode
+    dg = dgrad_fmt if dgrad_fmt is not None else fmt
+    wg = wgrad_fmt if wgrad_fmt is not None else fmt
     g = g.astype(jnp.float32)
-    # dA = g @ B^T  (dgrad);  dB = A^T @ g  (wgrad) — both at bwd_mode.
-    da = _run(g, jnp.swapaxes(b, -1, -2), bm, backend, jnp.float32)
+    # dA = g @ B^T  (dgrad at dg);  dB = A^T @ g  (wgrad at wg).
+    da = _run(g, jnp.swapaxes(b, -1, -2), dg, backend, jnp.float32)
     if b.ndim == 2 and a.ndim > 2:
         # weight grad: contract all token dims at once (sharding-preserving)
         from repro.kernels import ref as _ref
 
-        db = _ref.mp_wgrad_ref(a, g, bm)
+        db = _ref.mp_wgrad_ref(a, g, wg)
     else:
-        db = _run(jnp.swapaxes(a, -1, -2), g, bm, backend, jnp.float32)
+        db = _run(jnp.swapaxes(a, -1, -2), g, wg, backend, jnp.float32)
         db = _unbroadcast(db, b.shape)
     # reduce broadcast batch dims if matmul broadcasting was used
     da = _unbroadcast(da, a.shape)
@@ -90,42 +97,57 @@ def _unbroadcast(x: jax.Array, target_shape) -> jax.Array:
     return x
 
 
+def _resolve_bwd(fmt: Optional[FormatLike]):
+    return None if fmt is None else resolve(fmt)
+
+
 def mp_matmul(
     a: Operand,
     b: Operand,
-    mode: PrecisionMode = PrecisionMode.M16,
+    mode: FormatLike = PrecisionMode.M16,
     *,
-    bwd_mode: Optional[PrecisionMode] = None,
+    bwd_mode: Optional[FormatLike] = None,
+    dgrad_mode: Optional[FormatLike] = None,
+    wgrad_mode: Optional[FormatLike] = None,
     backend: Optional[str] = None,
     out_dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
-    """Multi-precision matmul: ``a @ b`` at the requested precision mode.
+    """Multi-precision matmul: ``a @ b`` at the requested precision format.
 
     a: (..., M, K); b: (..., K, N); returns (..., M, N).
     mode=AUTO dispatches on run-time operand analysis (paper mode 1) via
     ``lax.switch`` — only the selected branch executes, the analogue of the
     paper powering only the selected multiplier unit.
+
+    Backward formats: ``dgrad_mode`` (activation grad, dA = g @ B^T) and
+    ``wgrad_mode`` (weight grad, dB = A^T @ g) each default to ``bwd_mode``
+    (the v1 single backward knob), which defaults to ``mode``.
     """
-    backend = backend or get_default_backend()
-    if mode == PrecisionMode.AUTO:
+    backend = backend or context_lib.current_context().backend
+    dgrad = _resolve_bwd(dgrad_mode if dgrad_mode is not None else bwd_mode)
+    wgrad = _resolve_bwd(wgrad_mode if wgrad_mode is not None else bwd_mode)
+    if is_auto(mode):
         from repro.core import auto  # circular-import avoidance
 
         return auto.mp_matmul_auto(
-            a, b, backend=backend, out_dtype=out_dtype, bwd_mode=bwd_mode
+            a, b, backend=backend, out_dtype=out_dtype,
+            dgrad_mode=dgrad, wgrad_mode=wgrad,
         )
-    mode = PrecisionMode(mode)
+    fmt = resolve(mode)
     if isinstance(a, DD) or isinstance(b, DD):
         # DD operands: inference-only path (no VJP through two-float repr)
-        return _run(a, b, mode, backend, out_dtype)
-    return _mp_matmul_diff(a, b, mode, bwd_mode, backend, out_dtype)
+        return _run(a, b, fmt, backend, out_dtype)
+    return _mp_matmul_diff(a, b, fmt, dgrad, wgrad, backend, out_dtype)
 
 
 def mp_dense(
     x: jax.Array,
     w: jax.Array,
-    mode: PrecisionMode = PrecisionMode.M16,
+    mode: FormatLike = PrecisionMode.M16,
     *,
-    bwd_mode: Optional[PrecisionMode] = None,
+    bwd_mode: Optional[FormatLike] = None,
+    dgrad_mode: Optional[FormatLike] = None,
+    wgrad_mode: Optional[FormatLike] = None,
     backend: Optional[str] = None,
 ) -> jax.Array:
     """Dense layer contraction: x (..., K) @ w (K, N) -> (..., N).
@@ -134,16 +156,17 @@ def mp_dense(
     batch×seq dims and GSPMD silently drops the minor (seq) sharding, running
     the layer at full sequence per device.  The ref backend contracts the
     unflattened operand directly."""
-    return mp_matmul(x, w, mode, bwd_mode=bwd_mode, backend=backend)
+    return mp_matmul(x, w, mode, bwd_mode=bwd_mode, dgrad_mode=dgrad_mode,
+                     wgrad_mode=wgrad_mode, backend=backend)
 
 
 def mp_einsum_qk(
-    q: jax.Array, k: jax.Array, mode: PrecisionMode, **kw
+    q: jax.Array, k: jax.Array, mode: FormatLike, **kw
 ) -> jax.Array:
     """Attention logits: q (..., S, D) @ k^T (..., T, D) -> (..., S, T)."""
     return mp_matmul(q, jnp.swapaxes(k, -1, -2), mode, **kw)
 
 
-def mode_flops(mode: PrecisionMode, m: int, k: int, n: int) -> int:
+def mode_flops(mode: FormatLike, m: int, k: int, n: int) -> int:
     """MXU MAC-FLOPs for one mp_matmul (the paper's 'area x time' cost axis)."""
-    return 2 * m * k * n * mode_spec(mode).n_products
+    return 2 * m * k * n * resolve(mode).n_products

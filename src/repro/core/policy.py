@@ -3,41 +3,265 @@ run-time modes.
 
 The paper reconfigures one multiplier per operation; a training framework has
 dozens of matmul sites with different sensitivity (router >> logits > ffn).
-``PrecisionPolicy`` assigns a mode to each op class, and every model layer
+``PrecisionPolicy`` maps op-class *patterns* to formats, and every model layer
 resolves its matmuls through it, so an entire network's precision is
-reconfigured with one config object — at run time, without re-tracing when the
+reconfigured with one object — at run time, without re-tracing when the
 policy is passed statically per step, or via AUTO per-op.
+
+v2 (repro.mp): the policy is a glob-resolved mapping instead of a fixed-field
+dataclass —
+
+    PrecisionPolicy({"moe_*": "M8", "lm_head": "M23", "*": "M16"})
+
+with per-class backward overrides (dgrad/wgrad may run at different formats
+than fwd) and a lossless ``to_json``/``from_json`` wire format, so the
+serving engine can hot-swap precision per request (serve/engine.set_policy).
+
+Resolution precedence, most specific wins:
+  1. an exact user rule for the op class;
+  2. the user glob pattern with the most literal (non-wildcard) characters
+     (ties: earliest declared);
+  3. the built-in defaults (moe_router/lm_head -> M23, ``*`` -> M16), same
+     ordering rules — consulted only when NO user rule matches.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import fnmatch
+import json
+from typing import Dict, Mapping, Optional, Tuple, Union
 
-from repro.core.modes import PrecisionMode
+from repro.core import formats as formats_lib
+from repro.core.formats import (
+    FormatLike,
+    MPFormat,
+    PrecisionMode,
+    available_formats,
+    get_format,
+    is_auto,
+    resolve,
+)
+
+# resolved value of a policy slot: a concrete format or the AUTO sentinel
+ResolvedFormat = Union[MPFormat, PrecisionMode]
+
+
+def _norm(f: Optional[FormatLike]) -> Optional[str]:
+    """Normalize a format spelling to its registry name ('AUTO' for AUTO).
+
+    Policies store *names* (the stable wire identity), so a format object is
+    only accepted when the registry resolves its name back to an equal entry
+    — an unregistered hand-built MPFormat would otherwise pass construction
+    and blow up with KeyError at the first ``.mode()`` lookup, far from the
+    mistake."""
+    if f is None:
+        return None
+    if is_auto(f):
+        return "AUTO"
+    fmt = resolve(f)
+    if fmt.name not in available_formats() or get_format(fmt.name) != fmt:
+        raise ValueError(
+            f"format {fmt.name!r} is not registered (or differs from the "
+            f"registered entry); call repro.mp.register_format first")
+    return fmt.name
+
+
+def _denorm(name: Optional[str]) -> Optional[ResolvedFormat]:
+    if name is None:
+        return None
+    if name == "AUTO":
+        return PrecisionMode.AUTO
+    return get_format(name)
 
 
 @dataclasses.dataclass(frozen=True)
+class OpRule:
+    """Formats for one op-class pattern: fwd + optional backward overrides
+    (None inherits: dgrad/wgrad <- the policy-wide default <- fwd)."""
+
+    fwd: str
+    dgrad: Optional[str] = None
+    wgrad: Optional[str] = None
+
+
+def _to_rule(value) -> OpRule:
+    if isinstance(value, OpRule):
+        # re-normalize: hand-built rules carry raw names that must pass the
+        # same registration check as every other construction path
+        rule = OpRule(_norm(value.fwd), _norm(value.dgrad),
+                      _norm(value.wgrad))
+    elif isinstance(value, Mapping):
+        extra = set(value) - {"fwd", "dgrad", "wgrad"}
+        if extra:
+            raise ValueError(f"unknown rule keys {sorted(extra)}")
+        rule = OpRule(_norm(value["fwd"]), _norm(value.get("dgrad")),
+                      _norm(value.get("wgrad")))
+    elif isinstance(value, tuple):
+        fwd, *rest = value
+        rule = OpRule(_norm(fwd), *[_norm(v) for v in rest])
+    else:
+        rule = OpRule(_norm(value))
+    # fail at construction, not at the first lookup / backward trace:
+    if rule.fwd is None:
+        raise ValueError("a policy rule must specify a fwd format")
+    if "AUTO" in (rule.dgrad, rule.wgrad):
+        raise ValueError(
+            "dgrad/wgrad must be static formats (AUTO analyzes *operands*; "
+            "backward passes inherit a concrete format)")
+    return rule
+
+
+def _specificity(pattern: str) -> int:
+    return sum(1 for ch in pattern if ch not in "*?[]")
+
+
+def _best_match(rules: Tuple[Tuple[str, OpRule], ...], op_class: str
+                ) -> Optional[OpRule]:
+    best, best_key = None, None
+    for i, (pattern, rule) in enumerate(rules):
+        if pattern == op_class:
+            return rule  # exact beats any glob
+        if fnmatch.fnmatchcase(op_class, pattern):
+            key = (_specificity(pattern), -i)  # most literal; ties: earliest
+            if best_key is None or key > best_key:
+                best, best_key = rule, key
+    return best
+
+
+# built-in tier: consulted only when no user rule matches (v1 field defaults)
+DEFAULT_RULES: Tuple[Tuple[str, OpRule], ...] = (
+    ("moe_router", OpRule("M23")),   # routing is precision-sensitive
+    ("lm_head", OpRule("M23")),      # logits feed the loss
+    ("*", OpRule("M16")),
+)
+
 class PrecisionPolicy:
-    """Mode per op class.  ``None`` bwd modes inherit the fwd mode."""
+    """Glob-resolved mapping from op-class names to precision formats.
 
-    qkv: PrecisionMode = PrecisionMode.M16
-    attn_logits: PrecisionMode = PrecisionMode.M16
-    attn_out: PrecisionMode = PrecisionMode.M16
-    ffn: PrecisionMode = PrecisionMode.M16
-    moe_router: PrecisionMode = PrecisionMode.M23   # routing is precision-sensitive
-    moe_expert: PrecisionMode = PrecisionMode.M16
-    ssm: PrecisionMode = PrecisionMode.M16
-    lm_head: PrecisionMode = PrecisionMode.M23      # logits feed the loss
-    frontend: PrecisionMode = PrecisionMode.M16
-    bwd_dgrad: Optional[PrecisionMode] = None
-    bwd_wgrad: Optional[PrecisionMode] = None
+    Construct from a rules mapping, v1-style keyword fields, or both (kwargs
+    are exact rules layered over the mapping)::
 
-    def mode(self, op_class: str) -> PrecisionMode:
-        return getattr(self, op_class)
+        PrecisionPolicy({"moe_*": "M8", "*": "M16"}, lm_head="M23")
+        PrecisionPolicy(qkv=PrecisionMode.M8)            # v1 spelling
+        PrecisionPolicy({"ffn": {"fwd": "M8", "wgrad": "M23"}})
 
-    def bwd(self, op_class: str) -> Optional[PrecisionMode]:
-        # one bwd mode for all classes keeps the policy small; refine if needed
-        return self.bwd_dgrad
+    ``bwd_dgrad``/``bwd_wgrad`` set policy-wide backward defaults; per-rule
+    ``dgrad``/``wgrad`` entries override them per class.  Immutable and
+    hashable (safe to key jit-step caches).
+    """
+
+    __slots__ = ("_rules", "_bwd_dgrad", "_bwd_wgrad")
+
+    def __init__(self, rules: Optional[Mapping[str, object]] = None, *,
+                 bwd_dgrad: Optional[FormatLike] = None,
+                 bwd_wgrad: Optional[FormatLike] = None,
+                 **op_classes: FormatLike):
+        # kwargs are exact rules layered OVER the mapping: a same-pattern
+        # kwarg replaces the mapping's entry in place (order preserved)
+        merged = {p: _to_rule(v) for p, v in (rules or {}).items()}
+        for name, value in op_classes.items():
+            merged[name] = _to_rule(value)
+        object.__setattr__(self, "_rules", tuple(merged.items()))
+        object.__setattr__(self, "_bwd_dgrad", _norm(bwd_dgrad))
+        object.__setattr__(self, "_bwd_wgrad", _norm(bwd_wgrad))
+        if "AUTO" in (self._bwd_dgrad, self._bwd_wgrad):
+            raise ValueError(
+                "bwd_dgrad/bwd_wgrad must be static formats (AUTO analyzes "
+                "*operands*; backward passes inherit a concrete format)")
+
+    def __setattr__(self, name, value):
+        raise AttributeError("PrecisionPolicy is immutable")
+
+    # ---- resolution --------------------------------------------------------
+    @property
+    def rules(self) -> Tuple[Tuple[str, OpRule], ...]:
+        return self._rules
+
+    def _rule(self, op_class: str) -> OpRule:
+        rule = _best_match(self._rules, op_class)
+        if rule is None:
+            rule = _best_match(DEFAULT_RULES, op_class)
+        assert rule is not None  # DEFAULT_RULES ends with "*"
+        return rule
+
+    def mode(self, op_class: str) -> ResolvedFormat:
+        """The forward format for an op class (AUTO sentinel possible)."""
+        return _denorm(self._rule(op_class).fwd)
+
+    def dgrad(self, op_class: str) -> Optional[ResolvedFormat]:
+        """Activation-gradient format; None inherits the fwd format."""
+        rule = self._rule(op_class)
+        return _denorm(rule.dgrad if rule.dgrad is not None
+                       else self._bwd_dgrad)
+
+    def wgrad(self, op_class: str) -> Optional[ResolvedFormat]:
+        """Weight-gradient format; None inherits the fwd format.
+
+        Fallback chain ends at ``bwd_dgrad``: in v1 the single ``bwd()``
+        accessor (= bwd_dgrad) was passed as ``bwd_mode`` and drove BOTH
+        backward contractions, so a policy that sets only ``bwd_dgrad`` must
+        keep covering wgrad or v1 policies silently lose gradient bits."""
+        rule = self._rule(op_class)
+        name = rule.wgrad if rule.wgrad is not None else (
+            self._bwd_wgrad if self._bwd_wgrad is not None
+            else self._bwd_dgrad)
+        return _denorm(name)
+
+    def bwd(self, op_class: str) -> Optional[ResolvedFormat]:
+        """v1 accessor: the single backward mode (= dgrad)."""
+        return self.dgrad(op_class)
+
+    def bwd_kwargs(self, op_class: str) -> Dict[str, Optional[ResolvedFormat]]:
+        """Keyword bundle for mp_matmul/mp_dense: the op class's backward
+        formats (models splat this so dgrad and wgrad stay independently
+        reconfigurable)."""
+        return {"dgrad_mode": self.dgrad(op_class),
+                "wgrad_mode": self.wgrad(op_class)}
+
+    # ---- identity ----------------------------------------------------------
+    def _key(self):
+        return (self._rules, self._bwd_dgrad, self._bwd_wgrad)
+
+    def __eq__(self, other):
+        return isinstance(other, PrecisionPolicy) and self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __repr__(self):
+        rules = {p: dataclasses.asdict(r) for p, r in self._rules}
+        return (f"PrecisionPolicy({rules!r}, bwd_dgrad={self._bwd_dgrad!r}, "
+                f"bwd_wgrad={self._bwd_wgrad!r})")
+
+    # ---- wire format -------------------------------------------------------
+    def to_json(self) -> str:
+        """Lossless wire form.  Custom formats referenced by any rule are
+        embedded so the payload is self-contained — a serving engine can
+        apply it in a process that never registered them."""
+        referenced = [self._bwd_dgrad, self._bwd_wgrad]
+        payload = {"rules": {}, "bwd_dgrad": self._bwd_dgrad,
+                   "bwd_wgrad": self._bwd_wgrad}
+        for pattern, rule in self._rules:
+            payload["rules"][pattern] = {"fwd": rule.fwd, "dgrad": rule.dgrad,
+                                         "wgrad": rule.wgrad}
+            referenced += [rule.fwd, rule.dgrad, rule.wgrad]
+        payload["formats"] = formats_lib.collect_defs(referenced)
+        return json.dumps(payload, indent=1)
+
+    @classmethod
+    def from_json(cls, payload: Union[str, bytes, Mapping]) -> "PrecisionPolicy":
+        """Inverse of ``to_json``.  Embedded custom formats are registered
+        first (idempotent; conflicting redefinitions raise)."""
+        obj = json.loads(payload) if isinstance(payload, (str, bytes)) \
+            else payload
+        formats_lib.register_defs(obj.get("formats"))
+        # plain dicts, NOT pre-built OpRules: every name in the payload goes
+        # through _norm so an unknown format fails here, not at lookup time
+        rules = {p: {"fwd": r["fwd"], "dgrad": r.get("dgrad"),
+                     "wgrad": r.get("wgrad")}
+                 for p, r in (obj.get("rules") or {}).items()}
+        return cls(rules, bwd_dgrad=obj.get("bwd_dgrad"),
+                   bwd_wgrad=obj.get("bwd_wgrad"))
 
     # ---- canonical recipes -------------------------------------------------
     @classmethod
@@ -48,44 +272,26 @@ class PrecisionPolicy:
     @classmethod
     def train_fast(cls) -> "PrecisionPolicy":
         """Paper mode 2 everywhere it is safe (max throughput)."""
-        return cls(
-            qkv=PrecisionMode.M8,
-            attn_logits=PrecisionMode.M16,
-            attn_out=PrecisionMode.M8,
-            ffn=PrecisionMode.M8,
-            moe_expert=PrecisionMode.M8,
-            ssm=PrecisionMode.M16,
-        )
+        return cls({"attn_logits": "M16", "ssm": "M16", "moe_expert": "M8",
+                    "qkv": "M8", "attn_out": "M8", "ffn": "M8"})
 
     @classmethod
     def full_fp32(cls) -> "PrecisionPolicy":
         """Paper mode 4 everywhere — the accuracy baseline."""
-        m = PrecisionMode.M23
-        return cls(
-            qkv=m, attn_logits=m, attn_out=m, ffn=m, moe_router=m,
-            moe_expert=m, ssm=m, lm_head=m, frontend=m,
-        )
+        return cls({"*": "M23"})
 
     @classmethod
     def serve_default(cls) -> "PrecisionPolicy":
         """Decode-optimized: single-pass bf16 with precise logits."""
-        return cls(
-            qkv=PrecisionMode.M8,
-            attn_logits=PrecisionMode.M16,
-            attn_out=PrecisionMode.M8,
-            ffn=PrecisionMode.M8,
-            moe_expert=PrecisionMode.M8,
-            lm_head=PrecisionMode.M16,
-        )
+        return cls({"qkv": "M8", "attn_logits": "M16", "attn_out": "M8",
+                    "ffn": "M8", "moe_expert": "M8", "lm_head": "M16"})
 
     @classmethod
     def auto(cls) -> "PrecisionPolicy":
         """Paper mode 1 everywhere: per-op run-time operand analysis."""
-        a = PrecisionMode.AUTO
-        return cls(
-            qkv=a, attn_logits=a, attn_out=a, ffn=a,
-            moe_expert=a, ssm=a, frontend=a,
-        )
+        return cls({c: "AUTO" for c in ("qkv", "attn_logits", "attn_out",
+                                        "ffn", "moe_expert", "ssm",
+                                        "frontend")})
 
 
 POLICIES = {

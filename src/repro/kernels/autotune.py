@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.modes import PrecisionMode
+from repro.core.formats import FormatLike, resolve
 from repro.kernels import mp_matmul as kern
 
 BlockSizes = Tuple[int, int, int]  # (bm, bk, bn)
@@ -64,8 +64,11 @@ def _cache_path(kind: Optional[str] = None) -> str:
     return os.path.join(cache_dir(), f"{kind or device_kind()}.json")
 
 
-def table_key(M: int, K: int, N: int, mode: PrecisionMode, dtype) -> str:
-    return f"{PrecisionMode(mode).name}|{M}x{K}x{N}|{jnp.dtype(dtype).name}"
+def table_key(M: int, K: int, N: int, mode: FormatLike, dtype) -> str:
+    """Cache key: the resolved *format name* keys the table, so run-time
+    registered formats tune and persist exactly like the paper built-ins
+    (and built-in keys are unchanged from v1 — old tables stay valid)."""
+    return f"{resolve(mode).name}|{M}x{K}x{N}|{jnp.dtype(dtype).name}"
 
 
 def load_table(kind: Optional[str] = None) -> Dict[str, List[int]]:
@@ -94,7 +97,7 @@ def save_table(table: Dict[str, List[int]], kind: Optional[str] = None) -> str:
 
 def candidate_blocks(
     M: int, K: int, N: int,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     out_dtype=jnp.float32,
     vmem_budget: int = 0,
@@ -143,7 +146,7 @@ def _time_blocks(a, b, mode, blocks: BlockSizes, *, out_dtype, interpret,
 
 def autotune(
     M: int, K: int, N: int,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     dtype=jnp.float32,
     out_dtype=jnp.float32,
@@ -155,7 +158,7 @@ def autotune(
 
     Returns the cached winner immediately when the table already has the key
     (in-memory first, then the on-disk table for this device kind)."""
-    mode = PrecisionMode(mode)
+    mode = resolve(mode)
     key = table_key(M, K, N, mode, dtype)
     table = load_table()
     if key in table:
@@ -186,7 +189,7 @@ def autotune(
     return best
 
 
-def lookup(M: int, K: int, N: int, mode: PrecisionMode, dtype=jnp.float32
+def lookup(M: int, K: int, N: int, mode: FormatLike, dtype=jnp.float32
            ) -> Optional[BlockSizes]:
     """Cached winner or None — never triggers a sweep (the serving-safe path)."""
     entry = load_table().get(table_key(M, K, N, mode, dtype))

@@ -28,14 +28,13 @@ VMEM budget per grid step (defaults bm=bn=256, bk=512, mode M23):
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.modes import ModeSpec, PrecisionMode, spec as mode_spec
+from repro.core.formats import FormatLike, MPFormat, resolve
 
 
 def _extract_limbs(x: jax.Array, n_limbs: int) -> list[jax.Array]:
@@ -64,7 +63,7 @@ def _combine_orders(acc_ref, n_orders: int) -> jax.Array:
     return s + c
 
 
-def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtype):
+def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: MPFormat, out_dtype):
     """Grid (Mi, Nj, Kk); A block (bm,bk) f32; B block (bk,bn) f32."""
     k = pl.program_id(2)
 
@@ -96,7 +95,7 @@ def _fused_kernel(a_ref, b_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtype):
         o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
 
 
-def _prelimbed_kernel(a_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtype):
+def _prelimbed_kernel(a_ref, bl_ref, o_ref, acc_ref, *, spec: MPFormat, out_dtype):
     """B pre-decomposed to (L, bk, bn) bf16 (static weights: serving path)."""
     k = pl.program_id(2)
 
@@ -125,7 +124,7 @@ def _prelimbed_kernel(a_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec, out_dtyp
         o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
 
 
-def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: ModeSpec,
+def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: MPFormat,
                            out_dtype):
     """Both operands pre-decomposed (DD / >fp32 inputs, modes 5-6)."""
     k = pl.program_id(2)
@@ -164,12 +163,12 @@ def _compiler_params():
     return None
 
 
-def vmem_bytes(mode: PrecisionMode, bm: int, bk: int, bn: int,
+def vmem_bytes(mode: FormatLike, bm: int, bk: int, bn: int,
                out_dtype=jnp.float32) -> int:
     """VMEM footprint of one fused-kernel grid step (the autotuner's feasibility
     filter, kernels/autotune.py): A/B f32 tiles + on-the-fly bf16 limbs +
     per-order f32 accumulators + the output tile."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     a_tile = bm * bk * 4
     b_tile = bk * bn * 4
     limbs = s.n_limbs * (bm * bk + bk * bn) * 2
@@ -180,14 +179,14 @@ def vmem_bytes(mode: PrecisionMode, bm: int, bk: int, bn: int,
 
 def build_fused_call(
     M: int, K: int, N: int,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     bm: int, bk: int, bn: int,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ):
     """pallas_call for the fused on-the-fly-limbs kernel (padded shapes)."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     n_orders = s.max_order + 1
     cost = pl.CostEstimate(
         flops=2 * M * K * N * s.n_products,
@@ -212,7 +211,7 @@ def build_fused_call(
 
 def build_prelimbed_call(
     M: int, K: int, N: int,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     bm: int, bk: int, bn: int,
     out_dtype=jnp.float32,
@@ -220,7 +219,7 @@ def build_prelimbed_call(
     both: bool = False,
 ):
     """pallas_call with B (and optionally A) pre-decomposed to bf16 limbs."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     n_orders = s.max_order + 1
     L = s.n_limbs
     if both:

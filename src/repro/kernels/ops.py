@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import limbs as limbs_lib
 from repro.core.limbs import DD
-from repro.core.modes import PrecisionMode, spec as mode_spec
+from repro.core.formats import FormatLike, resolve
 from repro.kernels import mp_matmul as kern
 
 Operand = Union[jax.Array, DD]
@@ -47,7 +47,7 @@ def _pad2(x: jax.Array, rows: int, cols: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
-def _matmul2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
+def _matmul2d(a: jax.Array, b: jax.Array, mode: FormatLike, out_dtype,
               interpret: bool, bm, bk, bn) -> jax.Array:
     M, K = a.shape
     K2, N = b.shape
@@ -64,10 +64,10 @@ def _matmul2d(a: jax.Array, b: jax.Array, mode: PrecisionMode, out_dtype,
     return out[:M, :N]
 
 
-def _matmul2d_dd(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
+def _matmul2d_dd(a: Operand, b: Operand, mode: FormatLike, out_dtype,
                  interpret: bool, bm, bk, bn) -> jax.Array:
     """DD-capable path: pre-limb both operands outside the kernel."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     al = (limbs_lib.decompose_dd(a, s.n_limbs) if isinstance(a, DD)
           else limbs_lib.decompose(a, s.n_limbs))
     bl = (limbs_lib.decompose_dd(b, s.n_limbs) if isinstance(b, DD)
@@ -89,7 +89,7 @@ def _matmul2d_dd(a: Operand, b: Operand, mode: PrecisionMode, out_dtype,
 def mp_matmul_pallas(
     a: Operand,
     b: Operand,
-    mode: PrecisionMode = PrecisionMode.M16,
+    mode: FormatLike = "M16",
     *,
     out_dtype=jnp.float32,
     interpret: bool = False,
@@ -102,7 +102,7 @@ def mp_matmul_pallas(
     Leading batch dims are handled by flattening (when only ``a`` is batched,
     the batch folds into M — one big matmul, best MXU utilization) or vmap
     (when both are batched)."""
-    mode = PrecisionMode(mode)
+    mode = resolve(mode)
     if isinstance(a, DD) or isinstance(b, DD):
         assert (a.hi.ndim if isinstance(a, DD) else a.ndim) == 2, (
             "DD path supports 2D operands")
@@ -129,7 +129,7 @@ def mp_matmul_pallas(
 def mp_matmul_prelimbed_weights(
     x: jax.Array,
     w_limbs: jax.Array,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     out_dtype=jnp.float32,
     interpret: bool = False,
@@ -139,7 +139,7 @@ def mp_matmul_prelimbed_weights(
 ) -> jax.Array:
     """Serving fast path: weights decomposed once (``decompose_weights``),
     activations limbed on the fly inside the kernel.  x (..., K) @ W (K, N)."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     assert w_limbs.shape[0] >= s.n_limbs, "weight limbs < mode requirement"
     w_limbs = w_limbs[: s.n_limbs]
     lead = x.shape[:-1]

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import limbs as limbs_lib
 from repro.core.limbs import DD
-from repro.core.modes import ModeSpec, PrecisionMode, spec as mode_spec
+from repro.core.formats import FormatLike, resolve
 
 Operand = Union[jax.Array, DD]
 
@@ -37,7 +37,7 @@ def _limbs_of(x: Operand, n_limbs: int) -> jax.Array:
 def mp_matmul_ref(
     a: Operand,
     b: Operand,
-    mode: PrecisionMode = PrecisionMode.M16,
+    mode: FormatLike = "M16",
     *,
     out_dtype: jnp.dtype = jnp.float32,
     dim_numbers: Optional[str] = None,
@@ -47,7 +47,7 @@ def mp_matmul_ref(
     a: (..., M, K), b: (..., K, N) with broadcastable leading batch dims
     (jnp.matmul semantics).  Returns (..., M, N) in ``out_dtype``.
     """
-    s = mode_spec(mode)
+    s = resolve(mode)
 
     if s.n_limbs == 1:
         # mode M8: plain bf16 matmul with fp32 accumulation — one MXU pass.
@@ -93,7 +93,7 @@ def mp_matmul_ref(
 def mp_matmul_partials(
     a: Operand,
     b: Operand,
-    mode: PrecisionMode,
+    mode: FormatLike,
 ) -> jax.Array:
     """Per-order partial sums: (n_orders, ..., M, N) fp32, order o at index o.
 
@@ -102,7 +102,7 @@ def mp_matmul_partials(
     psum reduces this stack — the compensated cross-order combine
     (``combine_partials``) then runs once on the fully-reduced partials, so
     the K partition does not change which terms each compensation sees."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     al = _limbs_of(a, s.n_limbs)
     bl = _limbs_of(b, s.n_limbs)
     by_order: dict[int, jax.Array] = {}
@@ -115,7 +115,7 @@ def mp_matmul_partials(
 
 def combine_partials(
     partials: jax.Array,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     out_dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
@@ -124,7 +124,7 @@ def combine_partials(
     Order o carries magnitude ~2^-8o, so summation runs highest order first
     (smallest magnitude -> largest), matching the ref/Pallas accumulation
     order."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     terms = [partials[o] for o in range(s.n_orders - 1, -1, -1)]
     return limbs_lib.neumaier_sum(terms).astype(out_dtype)
 
@@ -143,7 +143,7 @@ def matmul_golden_f64(a, b) -> np.ndarray:
 def mp_wgrad_ref(
     a: jax.Array,
     g: jax.Array,
-    mode: PrecisionMode,
+    mode: FormatLike,
     *,
     out_dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
@@ -153,7 +153,7 @@ def mp_wgrad_ref(
     dot_general with multi-dim contraction keeps the (batch, seq) shardings
     visible to GSPMD (local partial wgrad + one reduce over the token axes)
     instead of flatten-then-matmul which gathers the sequence axis."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     lead = tuple(range(a.ndim - 1))
     if s.n_limbs == 1:
         return jax.lax.dot_general(
@@ -172,12 +172,12 @@ def mp_wgrad_ref(
 
 
 def naive_multipass_ref(
-    a: jax.Array, b: jax.Array, mode: PrecisionMode
+    a: jax.Array, b: jax.Array, mode: FormatLike
 ) -> jax.Array:
     """The *unoptimized* baseline the paper compares against (schoolbook):
     all n_limbs^2 limb products, no order cut, naive left-to-right fp32 sum.
     Used by benchmarks/table4_comparison.py."""
-    s = mode_spec(mode)
+    s = resolve(mode)
     al = _limbs_of(a, s.n_limbs)
     bl = _limbs_of(b, s.n_limbs)
     out = jnp.zeros(a.shape[:-1] + b.shape[-1:], jnp.float32)

@@ -22,7 +22,15 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--backend", default="",
+                    help="mp_matmul dispatch backend (ref/pallas/"
+                         "pallas_interpret/sharded); '' = context default")
     args = ap.parse_args()
+
+    if args.backend:
+        # one-shot process configuration (replaces REPRO_MP_BACKEND env)
+        import repro.mp as mp
+        mp.configure(backend=args.backend)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.encoder_only:

@@ -8,7 +8,6 @@ initialization; on CPU it drives the same code single-host.  The mesh,
 sharding rules and step function are identical to the dry-run's.
 """
 import argparse
-import os
 
 import jax
 
@@ -28,9 +27,17 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--policy", default="train_default")
+    ap.add_argument("--backend", default="",
+                    help="mp_matmul dispatch backend (ref/pallas/"
+                         "pallas_interpret/sharded); '' = context default")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--moment-dtype", default="float32")
     args = ap.parse_args()
+
+    if args.backend:
+        # one-shot process configuration (replaces REPRO_MP_BACKEND env)
+        import repro.mp as mp
+        mp.configure(backend=args.backend)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if not args.smoke and cfg.param_count() > 1e9 \

@@ -108,7 +108,7 @@ def chunked_attention(
 
     mode_l = policy.mode("attn_logits")
     mode_o = policy.mode("attn_out")
-    bwd = policy.bwd("attn_logits")
+    bwd = policy.bwd_kwargs("attn_logits")
 
     # (B, S, H, Dh) -> (nq, B, H, qc, Dh)
     qr = q.reshape(B, nq, qc, H, Dh).transpose(1, 0, 3, 2, 4) * scale
@@ -123,7 +123,7 @@ def chunked_attention(
             m_run, d_run, acc = carry
             ki, k_blk, v_blk = inp
             logits = mp_matmul(
-                q_blk, jnp.swapaxes(k_blk, -1, -2), mode_l, bwd_mode=bwd
+                q_blk, jnp.swapaxes(k_blk, -1, -2), mode_l, **bwd
             )  # (B, H, qc, kc)
             if causal:
                 mask = q_pos[qi][:, None] >= k_pos[ki][None, :]
@@ -132,7 +132,7 @@ def chunked_attention(
             p = jnp.exp(logits - m_new[..., None])
             alpha = jnp.exp(m_run - m_new)
             d_new = d_run * alpha + jnp.sum(p, axis=-1)
-            pv = mp_matmul(p.astype(jnp.float32), v_blk, mode_o, bwd_mode=bwd)
+            pv = mp_matmul(p.astype(jnp.float32), v_blk, mode_o, **bwd)
             acc = acc * alpha[..., None] + pv
             return (m_new, d_new, acc), None
 
@@ -179,11 +179,11 @@ def gqa_forward(
     B, S, D = x.shape
     h, hk, dh = dims.n_heads, dims.n_kv_heads, dims.head_dim
     mode_qkv = policy.mode("qkv")
-    bwd = policy.bwd("qkv")
+    bwd = policy.bwd_kwargs("qkv")
 
-    q = mp_dense(x, params["wq"], mode_qkv, bwd_mode=bwd).reshape(B, S, h, dh)
-    k = mp_dense(x, params["wk"], mode_qkv, bwd_mode=bwd).reshape(B, S, hk, dh)
-    v = mp_dense(x, params["wv"], mode_qkv, bwd_mode=bwd).reshape(B, S, hk, dh)
+    q = mp_dense(x, params["wq"], mode_qkv, **bwd).reshape(B, S, h, dh)
+    k = mp_dense(x, params["wk"], mode_qkv, **bwd).reshape(B, S, hk, dh)
+    v = mp_dense(x, params["wv"], mode_qkv, **bwd).reshape(B, S, hk, dh)
 
     if positions is None:
         if cache is not None:
@@ -221,7 +221,7 @@ def gqa_forward(
         out = _sh2.constrain(out, "attn_out_seq")
     out = out.reshape(B, S, h * dh)
     out = mp_dense(out, params["wo"], policy.mode("attn_out"),
-                   bwd_mode=policy.bwd("attn_out"))
+                   **policy.bwd_kwargs("attn_out"))
     return out, new_cache
 
 

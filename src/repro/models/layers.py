@@ -32,11 +32,11 @@ def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                op_class: str = "ffn") -> jax.Array:
     """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
     mode = policy.mode(op_class)
-    bwd = policy.bwd(op_class)
-    g = mp_dense(x, w_gate, mode, bwd_mode=bwd)
-    u = mp_dense(x, w_up, mode, bwd_mode=bwd)
+    bwd = policy.bwd_kwargs(op_class)
+    g = mp_dense(x, w_gate, mode, **bwd)
+    u = mp_dense(x, w_up, mode, **bwd)
     h = jax.nn.silu(g) * u
-    return mp_dense(h, w_down, mode, bwd_mode=bwd)
+    return mp_dense(h, w_down, mode, **bwd)
 
 
 def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
@@ -46,7 +46,8 @@ def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
 
 def unembed(x: jax.Array, w_head: jax.Array, policy: PrecisionPolicy) -> jax.Array:
     """LM head: (..., D) @ (D, V) at the logits mode (precision-sensitive)."""
-    return mp_dense(x, w_head, policy.mode("lm_head"), bwd_mode=policy.bwd("lm_head"))
+    return mp_dense(x, w_head, policy.mode("lm_head"),
+                    **policy.bwd_kwargs("lm_head"))
 
 
 # --------------------------------------------------------------------- RoPE

@@ -68,12 +68,12 @@ def init_mla_params(key, dims: MLADims, dtype=jnp.float32) -> dict:
 
 def _queries(params, x, dims: MLADims, policy: PrecisionPolicy):
     B, S, _ = x.shape
-    mode, bwd = policy.mode("qkv"), policy.bwd("qkv")
+    mode, bwd = policy.mode("qkv"), policy.bwd_kwargs("qkv")
     if dims.q_lora > 0:
-        cq = mp_dense(x, params["w_dq"], mode, bwd_mode=bwd)
-        q = mp_dense(cq, params["w_uq"], mode, bwd_mode=bwd)
+        cq = mp_dense(x, params["w_dq"], mode, **bwd)
+        q = mp_dense(cq, params["w_uq"], mode, **bwd)
     else:
-        q = mp_dense(x, params["w_q"], mode, bwd_mode=bwd)
+        q = mp_dense(x, params["w_q"], mode, **bwd)
     q = q.reshape(B, S, dims.n_heads, dims.qk_head_dim)
     return q[..., : dims.qk_nope_dim], q[..., dims.qk_nope_dim:]
 
@@ -91,7 +91,7 @@ def mla_forward(
 ) -> Tuple[jax.Array, Optional[MLACache]]:
     B, S, _ = x.shape
     h = dims.n_heads
-    mode, bwd = policy.mode("qkv"), policy.bwd("qkv")
+    mode, bwd = policy.mode("qkv"), policy.bwd_kwargs("qkv")
 
     if positions is None:
         base = cache.length if cache is not None else 0
@@ -100,8 +100,8 @@ def mla_forward(
     q_nope, q_rope = _queries(params, x, dims, policy)
     q_rope = apply_rope(q_rope, positions, dims.rope_theta)
 
-    c_kv = mp_dense(x, params["w_dkv"], mode, bwd_mode=bwd)      # (B,S,lora)
-    k_rope = mp_dense(x, params["w_kr"], mode, bwd_mode=bwd)     # (B,S,rope)
+    c_kv = mp_dense(x, params["w_dkv"], mode, **bwd)      # (B,S,lora)
+    k_rope = mp_dense(x, params["w_kr"], mode, **bwd)     # (B,S,rope)
     k_rope = apply_rope(k_rope[:, :, None, :], positions,
                         dims.rope_theta)[:, :, 0, :]
 
@@ -116,13 +116,14 @@ def mla_forward(
             out = _absorbed_decode(params, q_nope, q_rope, ckv, krc,
                                    new_cache.length, dims, policy)
             out = mp_dense(out.reshape(B, S, h * dims.v_head_dim), params["w_o"],
-                           policy.mode("attn_out"), bwd_mode=policy.bwd("attn_out"))
+                           policy.mode("attn_out"),
+                           **policy.bwd_kwargs("attn_out"))
             return out, new_cache
 
     # train / prefill: up-project latent to per-head K, V (unabsorbed)
-    k_nope = mp_dense(c_kv, params["w_uk"], mode, bwd_mode=bwd
+    k_nope = mp_dense(c_kv, params["w_uk"], mode, **bwd
                       ).reshape(B, S, h, dims.qk_nope_dim)
-    v = mp_dense(c_kv, params["w_uv"], mode, bwd_mode=bwd
+    v = mp_dense(c_kv, params["w_uv"], mode, **bwd
                  ).reshape(B, S, h, dims.v_head_dim)
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
                                 (B, S, h, dims.qk_rope_dim))
@@ -140,7 +141,7 @@ def mla_forward(
         out = _sh.constrain(out, "attn_out_seq")
     out = out.reshape(B, S, h * dims.v_head_dim)
     out = mp_dense(out, params["w_o"], policy.mode("attn_out"),
-                   bwd_mode=policy.bwd("attn_out"))
+                   **policy.bwd_kwargs("attn_out"))
     return out, new_cache
 
 

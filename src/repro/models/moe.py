@@ -21,14 +21,13 @@ paper's 'accuracy-critical application'); expert FFNs at ``moe_expert``.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.mpmatmul import mp_matmul
 from repro.core.policy import PrecisionPolicy
 from repro.models.layers import dense_init, swiglu_mlp
 
@@ -77,7 +76,7 @@ def _route(x2d: jax.Array, w_router: jax.Array, dims: MoEDims,
            policy: PrecisionPolicy):
     """Router: logits -> top-k, renormalized softmax over the chosen k."""
     logits = mp_matmul(x2d, w_router, policy.mode("moe_router"),
-                       bwd_mode=policy.bwd("moe_router"))
+                       **policy.bwd_kwargs("moe_router"))
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     top_p, top_i = jax.lax.top_k(probs, dims.top_k)        # (T, k)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
@@ -100,12 +99,12 @@ def moe_forward_dense(params: dict, x: jax.Array, dims: MoEDims,
     top_p, top_i, aux = _route(x2, params["router"], dims, policy)
 
     mode = policy.mode("moe_expert")
-    bwd = policy.bwd("moe_expert")
+    bwd = policy.bwd_kwargs("moe_expert")
 
     def expert_fn(wg, wu, wd):
-        g = mp_matmul(x2, wg, mode, bwd_mode=bwd)
-        u = mp_matmul(x2, wu, mode, bwd_mode=bwd)
-        return mp_matmul(jax.nn.silu(g) * u, wd, mode, bwd_mode=bwd)
+        g = mp_matmul(x2, wg, mode, **bwd)
+        u = mp_matmul(x2, wu, mode, **bwd)
+        return mp_matmul(jax.nn.silu(g) * u, wd, mode, **bwd)
 
     all_out = jax.lax.map(
         lambda w: expert_fn(*w),
@@ -158,16 +157,16 @@ def _expert_ffn_gathered(recv, params, dims: MoEDims, policy: PrecisionPolicy,
     all-gathers that expert's (data-sharded) weights — FSDP-style — so peak
     weight memory is one expert, and runs the swiglu FFN at moe_expert mode."""
     mode = policy.mode("moe_expert")
-    bwd = policy.bwd("moe_expert")
+    bwd = policy.bwd_kwargs("moe_expert")
 
     def one_expert(carry, inp):
         xe, wg_s, wu_s, wd_s = inp
         wg = jax.lax.all_gather(wg_s, data_axis, axis=0, tiled=True)
         wu = jax.lax.all_gather(wu_s, data_axis, axis=0, tiled=True)
         wd = jax.lax.all_gather(wd_s, data_axis, axis=0, tiled=True)
-        g = mp_matmul(xe.astype(jnp.float32), wg, mode, bwd_mode=bwd)
-        u = mp_matmul(xe.astype(jnp.float32), wu, mode, bwd_mode=bwd)
-        y = mp_matmul(jax.nn.silu(g) * u, wd, mode, bwd_mode=bwd)
+        g = mp_matmul(xe.astype(jnp.float32), wg, mode, **bwd)
+        u = mp_matmul(xe.astype(jnp.float32), wu, mode, **bwd)
+        y = mp_matmul(jax.nn.silu(g) * u, wd, mode, **bwd)
         return carry, y.astype(recv.dtype)
 
     _, out = jax.lax.scan(

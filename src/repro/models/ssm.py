@@ -117,7 +117,7 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, dims: SSMDims, policy: PrecisionPolicy,
         S = S + pad
     nc = S // cl
     mode = policy.mode("ssm")
-    bwd = policy.bwd("ssm")
+    bwd = policy.bwd_kwargs("ssm")
 
     # chunked views
     x_c = xh.reshape(Bsz, nc, cl, H, dh)
@@ -138,14 +138,14 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, dims: SSMDims, policy: PrecisionPolicy,
     # (B,nc,l,G,ds) x (B,nc,s,G,ds) -> (B,nc,G,l,s): batched matmul via mp
     Cg = C_c.transpose(0, 1, 3, 2, 4)                             # (B,nc,G,l,ds)
     Bg = B_c.transpose(0, 1, 3, 4, 2)                             # (B,nc,G,ds,s)
-    scores = mp_matmul(Cg, Bg, mode, bwd_mode=bwd)                # (B,nc,G,l,s)
+    scores = mp_matmul(Cg, Bg, mode, **bwd)                # (B,nc,G,l,s)
     # expand groups to heads, weight by decay and dt_j
     scores = jnp.repeat(scores, hpg, axis=2)                      # (B,nc,H,l,s)
     Lh = L.transpose(0, 1, 4, 2, 3)                               # (B,nc,H,l,s)
     w = scores * Lh * dt_c.transpose(0, 1, 3, 2)[:, :, :, None, :]
     xg = x_c.transpose(0, 1, 3, 2, 4)                             # (B,nc,H,s,dh)
     y_intra = mp_matmul(w.astype(jnp.float32), xg.astype(jnp.float32),
-                        mode, bwd_mode=bwd)                       # (B,nc,H,l,dh)
+                        mode, **bwd)                       # (B,nc,H,l,dh)
 
     # --- chunk states ------------------------------------------------------
     # S_chunk = sum_s exp(seg_total - cum_s) * dt_s * B_s ⊗ x_s
@@ -156,7 +156,7 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, dims: SSMDims, policy: PrecisionPolicy,
     # (B,nc,H,dh,cl) @ (B,nc,H,cl,ds) -> (B,nc,H,dh,ds)
     s_chunk = mp_matmul(x_c.transpose(0, 1, 3, 4, 2).astype(jnp.float32),
                         wBx.transpose(0, 1, 3, 2, 4).astype(jnp.float32),
-                        mode, bwd_mode=bwd)
+                        mode, **bwd)
 
     # --- inter-chunk state recurrence (sequential over nc, fp32) ----------
     seg_decay = jnp.exp(seg_total)                                # (B,nc,H)
@@ -179,7 +179,7 @@ def _ssd_chunked(xh, dt, A, Bm, Cm, dims: SSMDims, policy: PrecisionPolicy,
     Ch = jnp.repeat(C_c.transpose(0, 1, 3, 2, 4), hpg, axis=2)    # (B,nc,H,l,ds)
     y_inter = mp_matmul(Ch.astype(jnp.float32),
                         s_prev.transpose(0, 1, 2, 4, 3).astype(jnp.float32),
-                        mode, bwd_mode=bwd)                       # (B,nc,H,l,dh)
+                        mode, **bwd)                       # (B,nc,H,l,dh)
     y_inter = y_inter * jnp.exp(cum).transpose(0, 1, 3, 2)[..., None]
 
     y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4)              # (B,nc,l,H,dh)
@@ -199,9 +199,9 @@ def ssm_forward(
 ) -> Tuple[jax.Array, Optional[SSMCache]]:
     B, S, D = x.shape
     H, dh, ds, G = dims.n_heads, dims.head_dim, dims.d_state, dims.n_groups
-    mode, bwd = policy.mode("ssm"), policy.bwd("ssm")
+    mode, bwd = policy.mode("ssm"), policy.bwd_kwargs("ssm")
 
-    zxbcdt = mp_dense(x, params["in_proj"], mode, bwd_mode=bwd)
+    zxbcdt = mp_dense(x, params["in_proj"], mode, **bwd)
     z, xBC_pre, dt = jnp.split(
         zxbcdt, [dims.d_inner, dims.d_inner + dims.conv_dim], axis=-1)
 
@@ -224,7 +224,7 @@ def ssm_forward(
     y = y.reshape(B, S, dims.d_inner)
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm(y, params["norm_w"])
-    out = mp_dense(y.astype(x.dtype), params["out_proj"], mode, bwd_mode=bwd)
+    out = mp_dense(y.astype(x.dtype), params["out_proj"], mode, **bwd)
 
     new_cache = None
     if cache is not None:  # prefill: stash final conv window + final state
@@ -268,7 +268,7 @@ def _decode_step(params, z, xBC_new, dt, dims: SSMDims,
     y = y * jax.nn.silu(z.astype(jnp.float32))
     y = rms_norm(y, params["norm_w"])
     out = mp_dense(y.astype(jnp.float32), params["out_proj"],
-                   policy.mode("ssm"), bwd_mode=policy.bwd("ssm"))
+                   policy.mode("ssm"), **policy.bwd_kwargs("ssm"))
     new_window = window[:, 1:, :]
     return out, SSMCache(conv=new_window.astype(cache.conv.dtype),
                          state=state.astype(cache.state.dtype),

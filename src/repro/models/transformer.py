@@ -16,7 +16,6 @@ rematerialized (jax.checkpoint) — both mandatory at 60-88 layers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,0 +1,68 @@
+"""``repro.mp`` — the public multi-precision API facade (v2).
+
+One import gives the whole run-time reconfiguration surface of the paper's
+multiplier, framework-wide:
+
+    import repro.mp as mp
+
+    # 1. formats: the paper's table is open — mint new widths at run time
+    M30 = mp.register_format("M30", mantissa_bits=30, n_limbs=4, max_order=3)
+    y = mp.mp_matmul(a, b, M30)                      # or mode="M30"
+
+    # 2. context: explicit, scoped, serializable configuration
+    mp.configure(backend="pallas")                   # process default
+    with mp.context(backend="sharded",               # scoped (trace-time)
+                    policy=mp.PrecisionPolicy({"moe_*": "M8", "*": "M16"})):
+        step = jax.jit(train_step); step(state, batch)
+
+    # 3. policies: glob-resolved per-op-class formats with split backward
+    pol = mp.PrecisionPolicy({"ffn": {"fwd": "M8", "wgrad": "M23"}},
+                             bwd_dgrad="M16")
+    engine.set_policy(pol.to_json())                 # serving hot-swap
+
+Migration from the v1 global/env API (all v1 spellings still work as
+deprecated shims — see README.md for the full table):
+
+    set_default_backend("pallas")   ->  mp.configure(backend="pallas")
+    with use_backend("sharded"):    ->  with mp.context(backend="sharded"):
+    REPRO_MP_BACKEND=...            ->  mp.configure(backend=...)
+    REPRO_MP_AUTOTUNE=1             ->  mp.configure(autotune=True)
+"""
+from repro.core.formats import (  # noqa: F401
+    FormatLike,
+    MPFormat,
+    PrecisionMode,
+    available_formats,
+    format_def,
+    get_format,
+    is_auto,
+    register_format,
+    resolve,
+    unregister_format,
+)
+from repro.core.context import (  # noqa: F401
+    DEFAULT_AUTO_CANDIDATES,
+    PrecisionContext,
+    autotune_enabled,
+    configure,
+    context,
+    current_context,
+    default_context,
+    reset_context,
+)
+from repro.core.policy import OpRule, PrecisionPolicy, get_policy  # noqa: F401
+from repro.core.mpmatmul import (  # noqa: F401
+    mode_flops,
+    mp_dense,
+    mp_einsum_qk,
+    mp_matmul,
+)
+from repro.core.auto import auto_report, mp_matmul_auto, select_mode_index  # noqa: F401
+from repro.core.dispatch import (  # noqa: F401
+    available_backends,
+    pin_backend,
+    register_backend,
+    unregister_backend,
+)
+
+AUTO = PrecisionMode.AUTO

@@ -6,17 +6,25 @@ active slot in one jit'd step.  Precision: decode runs the ``serve_default``
 policy (paper mode 2 with mode-3 logits) or AUTO — the run-time
 reconfigurability the paper targets at 'portable devices' maps to serving's
 latency/quality dial here.
+
+Run-time reconfiguration endpoint: :meth:`ServeEngine.set_policy` accepts a
+``PrecisionPolicy`` (object, JSON string, or parsed payload — the wire format
+of ``PrecisionPolicy.to_json``, which embeds any custom format definitions)
+and swaps the precision of all subsequent prefill/decode steps.  Step
+functions are cached per policy, so flipping between a small set of policies
+re-traces once per policy, then swaps are free.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import context as context_lib
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
 from repro.train.trainer import make_prefill_step, make_serve_step
@@ -40,21 +48,61 @@ class ServeEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.policy = policy or PrecisionPolicy.serve_default()
+        self.mesh = mesh
         self.greedy = greedy
         # backend routing is a trace-time decision (core/dispatch.py): the
         # wrapper pins it around the traced body so one engine can run ref on
         # CPU CI, the autotuned Pallas kernel on a TPU slice, or the sharded
         # path on a multi-device host without touching the model code
         self.matmul_backend = matmul_backend
-        from repro.core.dispatch import pin_backend
-
-        self._prefill = jax.jit(pin_backend(
-            make_prefill_step(cfg, self.policy, mesh), matmul_backend))
-        self._decode = jax.jit(pin_backend(
-            make_serve_step(cfg, self.policy, mesh), matmul_backend))
+        self._step_cache: Dict[PrecisionPolicy, Tuple] = {}
+        self.policy = (policy
+                       or context_lib.current_context().policy
+                       or PrecisionPolicy.serve_default())
+        self._prefill, self._decode = self._steps_for(self.policy)
         self.cache = T.make_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
         self._slots: List[Optional[Request]] = [None] * max_batch
+
+    # distinct policies whose jit'd steps stay resident; per-request swapping
+    # across more than this re-traces in LRU fashion instead of leaking
+    # compiled executables without bound
+    MAX_POLICY_CACHE = 8
+
+    def _steps_for(self, policy: PrecisionPolicy) -> Tuple:
+        """jit'd (prefill, decode) pair for one policy (LRU-cached: swapping
+        among a working set of policies re-traces once each, then is free)."""
+        if policy in self._step_cache:
+            self._step_cache[policy] = self._step_cache.pop(policy)  # LRU touch
+        else:
+            from repro.core.dispatch import pin_backend
+
+            while len(self._step_cache) >= self.MAX_POLICY_CACHE:
+                self._step_cache.pop(next(iter(self._step_cache)))
+            self._step_cache[policy] = (
+                jax.jit(pin_backend(
+                    make_prefill_step(self.cfg, policy, self.mesh),
+                    self.matmul_backend)),
+                jax.jit(pin_backend(
+                    make_serve_step(self.cfg, policy, self.mesh),
+                    self.matmul_backend)),
+            )
+        return self._step_cache[policy]
+
+    def set_policy(self, policy: Union[PrecisionPolicy, str, bytes, dict]
+                   ) -> PrecisionPolicy:
+        """Hot-swap the precision policy for all subsequent steps (the
+        serving control-plane endpoint for the paper's run-time mode dial).
+
+        Accepts a ``PrecisionPolicy`` or its JSON wire form
+        (``PrecisionPolicy.to_json``; embedded custom formats are registered
+        on the fly).  Safe mid-stream: the KV cache layout is policy-
+        independent, so in-flight generations continue at the new precision.
+        Returns the active policy."""
+        if not isinstance(policy, PrecisionPolicy):
+            policy = PrecisionPolicy.from_json(policy)
+        self.policy = policy
+        self._prefill, self._decode = self._steps_for(policy)
+        return policy
 
     # -- single-request path (prefill writes the whole pool cache; simple and
     #    jit-stable: one prefill per unique prompt length bucket) -----------

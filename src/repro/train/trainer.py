@@ -163,9 +163,13 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
                  policy: Optional[PrecisionPolicy] = None, mesh=None,
                  escalation_policy: Optional[PrecisionPolicy] = None):
+        from repro.core import context as context_lib
+
         self.cfg = cfg
         self.tcfg = tcfg
-        self.policy = policy or PrecisionPolicy.train_default()
+        # explicit policy > active PrecisionContext's policy > recipe default
+        self.policy = (policy or context_lib.current_context().policy
+                       or PrecisionPolicy.train_default())
         self.escalation_policy = (escalation_policy
                                   or PrecisionPolicy.full_fp32())
         self.mesh = mesh

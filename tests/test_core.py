@@ -10,7 +10,7 @@ pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    DD, MODE_TABLE, PrecisionMode, classify, decompose, exception_counts,
+    MODE_TABLE, PrecisionMode, classify, decompose, exception_counts,
     mode_flops, mp_matmul, reconstruct, select_mode_index, spec,
     validate_mode_pair, PrecisionPolicy, get_policy, all_finite,
 )
@@ -204,11 +204,11 @@ def test_all_finite_tree():
 # ---------------------------------------------------------------- policy
 def test_policy_recipes():
     p = get_policy("train_default")
-    assert p.moe_router == PrecisionMode.M23
+    assert p.mode("moe_router").name == "M23"
     fast = get_policy("train_fast")
-    assert fast.ffn == PrecisionMode.M8
+    assert fast.mode("ffn").name == "M8"
     auto = get_policy("auto")
-    assert auto.ffn == PrecisionMode.AUTO
+    assert auto.mode("ffn") == PrecisionMode.AUTO
     assert isinstance(p, PrecisionPolicy)
 
 

@@ -215,15 +215,15 @@ def test_registry_routing_and_errors():
         unregister_backend("sharded")
     calls = []
 
-    def custom(a, b, mode, out_dtype):
-        calls.append(mode)
-        return ref.mp_matmul_ref(a, b, mode, out_dtype=out_dtype)
+    def custom(a, b, fmt, out_dtype):
+        calls.append(fmt)  # backends receive the resolved MPFormat
+        return ref.mp_matmul_ref(a, b, fmt, out_dtype=out_dtype)
 
     register_backend("custom_test", custom)
     try:
         out = mp_matmul(jnp.ones((4, 8)), jnp.ones((8, 4)), PrecisionMode.M8,
                         backend="custom_test")
-        assert calls == [PrecisionMode.M8]
+        assert [f.name for f in calls] == ["M8"]
         np.testing.assert_allclose(np.asarray(out), 8.0)
     finally:
         unregister_backend("custom_test")

@@ -1,9 +1,7 @@
 """Fault-tolerance integration tests: checkpoint/restart, NaN rollback with
 precision escalation, elastic mesh restore, straggler detection."""
-import os
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
@@ -75,7 +73,7 @@ def test_nan_rollback_and_escalation(tmp_path, monkeypatch):
 
 def test_elastic_restore_across_mesh_shapes(tmp_path):
     """Checkpoint saved logically restores onto a different device mesh."""
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     d = str(tmp_path / "ckpt")
     params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}

@@ -3,7 +3,6 @@ UNROLLED model (where cost_analysis is trustworthy), then assert the parser
 correctly recovers the ~n_layers× multiplier on the scanned variant."""
 import dataclasses
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -52,7 +51,6 @@ def test_parser_recovers_scan_multiplier():
 
 def test_parser_counts_collectives_in_loops():
     """A psum inside a scan must be multiplied by the trip count."""
-    import os
     n_layers = 5
 
     def f(x):

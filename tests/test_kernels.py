@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.limbs import DD, dd_from_f64
-from repro.core.modes import MODE_TABLE, PrecisionMode, spec as mode_spec
+from repro.core.modes import PrecisionMode, spec as mode_spec
 from repro.kernels import ops, ref
 
 MODES = [PrecisionMode.M8, PrecisionMode.M16, PrecisionMode.M23]

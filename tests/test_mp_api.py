@@ -1,0 +1,645 @@
+"""repro.mp v2 API suite: custom-format registry, PrecisionContext, glob
+policies with split backward formats, and the serving set_policy endpoint.
+DESIGN.md §5, README migration table."""
+import os
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.mp as mp
+from repro.core import context as context_lib
+from repro.core.modes import MODE_TABLE, PrecisionMode
+from repro.kernels import autotune, ref
+
+M23_BOUND = float(MODE_TABLE[PrecisionMode.M23].rel_err_bound)
+M36_BOUND = float(MODE_TABLE[PrecisionMode.M36].rel_err_bound)
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+def _rel(out, gold):
+    return float(np.linalg.norm(np.asarray(out, np.float64) - gold)
+                 / max(np.linalg.norm(gold), 1e-30))
+
+
+@pytest.fixture
+def m30():
+    fmt = mp.register_format("M30", mantissa_bits=30, n_limbs=4, max_order=3)
+    yield fmt
+    mp.unregister_format("M30")
+
+
+# ------------------------------------------------------------ format registry
+def test_builtins_seed_the_registry():
+    assert set(mp.available_formats()) >= {"M8", "M16", "M23", "M36", "M52"}
+    assert mp.resolve("M16") is MODE_TABLE[PrecisionMode.M16]
+    assert mp.resolve(PrecisionMode.M16).n_products == 3
+    assert mp.resolve("M16").mode is PrecisionMode.M16
+    with pytest.raises(ValueError):
+        mp.resolve(PrecisionMode.AUTO)
+    with pytest.raises(ValueError):
+        mp.unregister_format("M16")
+
+
+def test_custom_format_round_trip(m30, tmp_path, monkeypatch):
+    """The acceptance path: register -> parity through every backend at the
+    registered width -> autotune keys stable -> unregister."""
+    # every spelling resolves to one object
+    assert mp.resolve("M30") is m30 is mp.resolve(m30)
+    assert m30.n_limbs == 4 and m30.n_products == 10 and m30.n_orders == 4
+    # the registered bound slots between the neighbouring built-ins
+    assert M36_BOUND < m30.rel_err_bound < M23_BOUND
+
+    rng = np.random.default_rng(0)
+    a, b = _rand(rng, (96, 200)), _rand(rng, (200, 128))
+    gold = ref.matmul_golden_f64(a, b)
+    rel16 = _rel(mp.mp_matmul(a, b, "M16"), gold)
+    outs = {}
+    for backend in ("ref", "pallas_interpret", "sharded"):
+        out = mp.mp_matmul(a, b, "M30", backend=backend)
+        outs[backend] = np.asarray(out, np.float64)
+        rel = _rel(out, gold)
+        # a 30-bit format must land in the high-precision band: inside its
+        # own budget (between M23's and M36's bounds) and far below 2-limb
+        assert rel < m30.rel_err_bound, (backend, rel)
+        assert rel < rel16 / 10, (backend, rel, rel16)
+    for backend in ("pallas_interpret", "sharded"):
+        mutual = np.linalg.norm(outs[backend] - outs["ref"]) \
+            / np.linalg.norm(outs["ref"])
+        assert mutual < m30.rel_err_bound
+
+    # autotune cache keys are format-name keyed: stable across spellings and
+    # unchanged for the built-ins (old on-disk tables stay valid)
+    key = autotune.table_key(64, 192, 128, "M30", jnp.float32)
+    assert key == autotune.table_key(64, 192, 128, m30, jnp.float32)
+    assert key == "M30|64x192x128|float32"
+    assert autotune.table_key(64, 192, 128, PrecisionMode.M16, jnp.float32) \
+        == "M16|64x192x128|float32"
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    cands = [(32, 64, 128), (32, 128, 128)]
+    blocks = autotune.autotune(64, 192, 128, m30, interpret=True, iters=1,
+                               candidates=cands)
+    assert tuple(blocks) in {tuple(c) for c in cands}
+    autotune.clear_memory_cache()
+    # fresh "process": served from disk without sweeping (candidates=[] would
+    # raise if a sweep ran), keyed by the custom format's name
+    again = autotune.autotune(64, 192, 128, "M30", interpret=True, iters=1,
+                              candidates=[])
+    assert tuple(again) == tuple(blocks)
+    autotune.clear_memory_cache()
+
+
+def test_register_format_validation(m30):
+    # idempotent re-register, conflicting re-register rejected
+    assert mp.register_format("M30", mantissa_bits=30, n_limbs=4,
+                              max_order=3) is m30
+    with pytest.raises(ValueError, match="different"):
+        mp.register_format("M30", mantissa_bits=30, n_limbs=4, max_order=2)
+    with pytest.raises(ValueError):
+        mp.register_format("bad", mantissa_bits=16, n_limbs=0)
+    with pytest.raises(ValueError):
+        mp.register_format("bad", mantissa_bits=16, n_limbs=2, max_order=5)
+
+
+def test_unregister_then_unknown():
+    mp.register_format("Mtmp", mantissa_bits=24, n_limbs=3)
+    assert mp.resolve("Mtmp").n_limbs == 3
+    mp.unregister_format("Mtmp")
+    with pytest.raises(KeyError):
+        mp.resolve("Mtmp")
+
+
+def test_custom_format_in_auto_candidates(m30):
+    """AUTO candidate sets accept run-time formats (lax.switch branches are
+    format-keyed)."""
+    rng = np.random.default_rng(3)
+    a, b = _rand(rng, (16, 32)), _rand(rng, (32, 8))
+    out = mp.mp_matmul_auto(a, b, candidates=("M8", m30))
+    gold = ref.matmul_golden_f64(a, b)
+    assert _rel(out, gold) < m30.rel_err_bound  # full-mantissa data -> M30
+
+
+# ------------------------------------------------------------------- policy
+def test_policy_glob_precedence():
+    pol = mp.PrecisionPolicy({"moe_*": "M8", "lm_head": "M23", "*": "M16"})
+    # user glob beats the built-in exact default (moe_router default is M23)
+    assert pol.mode("moe_router").name == "M8"
+    assert pol.mode("moe_expert").name == "M8"
+    assert pol.mode("lm_head").name == "M23"   # exact beats "*"
+    assert pol.mode("qkv").name == "M16"
+    # among globs, most literal characters win regardless of declaration order
+    pol2 = mp.PrecisionPolicy({"m*": "M16", "moe_*": "M8"})
+    assert pol2.mode("moe_router").name == "M8"
+    assert pol2.mode("mla").name == "M16"
+    # defaults tier only applies when no user rule matches
+    pol3 = mp.PrecisionPolicy({"ffn": "M8"})
+    assert pol3.mode("ffn").name == "M8"
+    assert pol3.mode("moe_router").name == "M23"
+    assert pol3.mode("qkv").name == "M16"
+
+
+def test_policy_v1_kwargs_still_work():
+    pol = mp.PrecisionPolicy(qkv=PrecisionMode.M8, lm_head="M16")
+    assert pol.mode("qkv").name == "M8"
+    assert pol.mode("lm_head").name == "M16"
+    assert pol.mode("moe_router").name == "M23"  # v1 field default preserved
+    assert pol.bwd("qkv") is None                # v1 accessor
+    pol2 = mp.PrecisionPolicy(bwd_dgrad="M23")
+    assert pol2.bwd("ffn").name == "M23"
+
+
+def test_policy_split_backward_overrides():
+    pol = mp.PrecisionPolicy(
+        {"ffn": {"fwd": "M8", "wgrad": "M23"}, "*": "M16"},
+        bwd_dgrad="M16")
+    assert pol.mode("ffn").name == "M8"
+    assert pol.dgrad("ffn").name == "M16"   # policy-wide default
+    assert pol.wgrad("ffn").name == "M23"   # per-class override
+    # bwd_dgrad covers wgrad too (v1's single knob drove both contractions)
+    assert pol.wgrad("qkv").name == "M16"
+    kw = pol.bwd_kwargs("ffn")
+    assert kw["dgrad_mode"].name == "M16" and kw["wgrad_mode"].name == "M23"
+
+
+def test_policy_json_round_trip_with_custom_format():
+    mp.register_format("P12", mantissa_bits=12, n_limbs=2, max_order=1)
+    try:
+        pol = mp.PrecisionPolicy(
+            {"moe_*": "P12", "ffn": {"fwd": "M8", "wgrad": "M23"}, "*": "M16"},
+            bwd_dgrad="M16")
+        payload = pol.to_json()
+        # the payload is self-contained: strip the format, then re-hydrate
+        mp.unregister_format("P12")
+        pol2 = mp.PrecisionPolicy.from_json(payload)
+        assert pol2 == pol and hash(pol2) == hash(pol)
+        assert pol2.mode("moe_expert").name == "P12"
+        assert mp.resolve("P12").mantissa_bits == 12  # re-registered
+        assert pol2.wgrad("ffn").name == "M23"
+        assert pol2.dgrad("qkv").name == "M16"
+    finally:
+        mp.unregister_format("P12")
+
+
+def test_policy_kwargs_override_mapping():
+    """Documented layering: a same-pattern kwarg replaces the mapping's rule
+    (declaration order otherwise preserved)."""
+    pol = mp.PrecisionPolicy({"ffn": "M8", "*": "M16"}, ffn="M23")
+    assert pol.mode("ffn").name == "M23"
+    assert pol.mode("qkv").name == "M16"
+
+
+def test_policy_rejects_unregistered_format_object():
+    """A hand-built MPFormat must be registered before a policy stores it —
+    otherwise the failure would surface as a KeyError at lookup time, far
+    from the construction site."""
+    stray = mp.MPFormat("X20", 20, 3, 2)
+    with pytest.raises(ValueError, match="not registered"):
+        mp.PrecisionPolicy({"*": stray})
+    mp.register_format("X20", mantissa_bits=20, n_limbs=3, max_order=2)
+    try:
+        # the registry's own object is accepted...
+        pol = mp.PrecisionPolicy({"*": mp.get_format("X20")})
+        assert pol.mode("ffn").name == "X20"
+        # ...but a same-name object whose parameters differ from the
+        # registered entry (here: the derived rel_err_bound) is rejected
+        with pytest.raises(ValueError, match="not registered"):
+            mp.PrecisionPolicy({"*": stray})
+    finally:
+        mp.unregister_format("X20")
+
+
+def test_context_json_embeds_custom_candidate_formats():
+    """A serialized context referencing a custom AUTO candidate must hydrate
+    in a process that never registered the format."""
+    mp.register_format("X14", mantissa_bits=14, n_limbs=2, max_order=1)
+    try:
+        ctx = mp.PrecisionContext(auto_candidates=("M8", "X14"))
+        payload = ctx.to_json()
+        mp.unregister_format("X14")          # simulate the fresh process
+        ctx2 = mp.PrecisionContext.from_json(payload)
+        assert tuple(ctx2.auto_candidates) == ("M8", "X14")
+        assert mp.resolve("X14").mantissa_bits == 14   # re-registered
+    finally:
+        mp.unregister_format("X14")
+
+
+def test_context_replace_rejects_unknown_fields():
+    with pytest.raises(TypeError):
+        mp.PrecisionContext().replace(mesh_="typo")
+
+
+def test_from_json_rejects_unknown_format_at_parse_time():
+    """An unembedded, unregistered format name in a wire payload must fail
+    when the policy is constructed (set_policy time), not at the first op
+    lookup mid-request."""
+    with pytest.raises(KeyError, match="M99"):
+        mp.PrecisionPolicy.from_json(
+            '{"rules": {"moe_*": {"fwd": "M99"}}}')
+
+
+def test_auto_name_is_reserved():
+    with pytest.raises(ValueError, match="reserved"):
+        mp.register_format("AUTO", mantissa_bits=16, n_limbs=2)
+    with pytest.raises(ValueError, match="reserved"):
+        mp.register_format("auto", mantissa_bits=16, n_limbs=2)
+
+
+def test_auto_cannot_be_its_own_candidate():
+    """Validation must reject what select_mode_index cannot consume."""
+    with pytest.raises(ValueError):
+        mp.configure(auto_candidates=(mp.AUTO, "M16"))
+    with pytest.raises(ValueError):
+        with mp.context(auto_candidates=(mp.AUTO,)):
+            pass
+    assert mp.current_context().auto_candidates == \
+        mp.DEFAULT_AUTO_CANDIDATES
+
+
+def test_validate_rejects_degenerate_configs():
+    with pytest.raises(ValueError):
+        mp.configure(auto_candidates=())   # AUTO needs >=1 static format
+    with pytest.raises(ValueError):
+        mp.configure(backend="")           # falsy backend would poison dispatch
+    with pytest.raises(ValueError, match="fwd format"):
+        mp.PrecisionPolicy({"ffn": None})  # a rule without a fwd format
+
+
+def test_auto_candidate_order_does_not_change_choice():
+    """The cheapest adequate format wins even when listed last, and the
+    returned index maps into the CALLER's candidate order."""
+    ones = jnp.ones((16, 16), jnp.float32)  # exactly 1 significant limb
+    idx = int(mp.select_mode_index(ones, ones, candidates=("M23", "M8")))
+    assert ("M23", "M8")[idx] == "M8"       # caller-order index contract
+    rep = mp.auto_report(ones, ones, candidates=("M23", "M8"))
+    assert rep["selected_format"] == "M8"
+    # full-mantissa data escalates to the adequate candidate, any order
+    rng = np.random.default_rng(13)
+    x = _rand(rng, (16, 16))
+    idx2 = int(mp.select_mode_index(x, x, candidates=("M23", "M8")))
+    assert ("M23", "M8")[idx2] == "M23"
+
+
+def test_v1_bwd_dgrad_still_covers_wgrad():
+    """v1's single bwd knob drove BOTH backward contractions; a policy that
+    only sets bwd_dgrad must keep covering wgrad (explicit slots still win)."""
+    pol = mp.PrecisionPolicy(bwd_dgrad="M23")
+    assert pol.wgrad("ffn").name == "M23"       # v1 fallback chain
+    assert pol.dgrad("ffn").name == "M23"
+    pol2 = mp.PrecisionPolicy(bwd_dgrad="M23", bwd_wgrad="M16")
+    assert pol2.wgrad("ffn").name == "M16"      # explicit wgrad wins
+    pol3 = mp.PrecisionPolicy({"ffn": {"fwd": "M8", "wgrad": "M36"}},
+                              bwd_dgrad="M23")
+    assert pol3.wgrad("ffn").name == "M36"      # per-rule wins over both
+
+
+def test_context_from_json_validates_payload():
+    """A wire context with an unknown backend or unresolvable candidates
+    fails at parse time, like PrecisionPolicy.from_json does."""
+    with pytest.raises(ValueError, match="unknown backend"):
+        mp.PrecisionContext.from_json('{"backend": "bogus"}')
+    with pytest.raises(KeyError, match="M99"):
+        mp.PrecisionContext.from_json('{"auto_candidates": ["M99"]}')
+
+
+def test_backward_slots_reject_auto():
+    """AUTO analyzes operands; a backward pass has no AUTO semantics — the
+    policy must reject it at construction/set_policy time, not mid-trace."""
+    with pytest.raises(ValueError, match="static formats"):
+        mp.PrecisionPolicy({"ffn": {"fwd": "M8", "dgrad": "AUTO"}})
+    with pytest.raises(ValueError, match="static formats"):
+        mp.PrecisionPolicy(bwd_wgrad="AUTO")
+    with pytest.raises(ValueError, match="static formats"):
+        mp.PrecisionPolicy.from_json(
+            '{"rules": {"ffn": {"fwd": "M8", "wgrad": "AUTO"}}}')
+
+
+def test_v1_modespec_positional_construction():
+    """v1 spelled ModeSpec(PrecisionMode.M8, 8, 1, 0): the enum-first field
+    must coerce to the format name instead of minting a broken format."""
+    from repro.core.modes import ModeSpec
+    legacy = ModeSpec(PrecisionMode.M8, 8, 1, 0, rel_err_bound=2.0**-6)
+    assert legacy.name == "M8"
+    assert legacy.mode is PrecisionMode.M8
+    assert legacy == mp.get_format("M8")
+
+
+def test_sharded_context_mesh_axis_handling():
+    """A 1-D context mesh under any axis name shards; a multi-D mesh without
+    a 'data' axis raises instead of silently running single-device."""
+    rng = np.random.default_rng(12)
+    a, b = _rand(rng, (16, 64)), _rand(rng, (64, 16))
+    want = mp.mp_matmul(a, b, "M16", backend="ref")
+    mesh_x = jax.make_mesh((4,), ("x",))
+    with mp.context(mesh=mesh_x):
+        got = mp.mp_matmul(a, b, "M16", backend="sharded")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    bad = jax.make_mesh((2, 2), ("rows", "cols"))
+    with mp.context(mesh=bad):
+        with pytest.raises(ValueError, match="1-D mesh"):
+            mp.mp_matmul(a, b, "M16", backend="sharded")
+
+
+def test_env_autotune_shim_is_live(tmp_path, monkeypatch):
+    """v1 read REPRO_MP_AUTOTUNE per call; flipping it after the first
+    matmul must still trigger sweeps."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    rng = np.random.default_rng(8)
+    a, b = _rand(rng, (32, 64)), _rand(rng, (64, 32))
+    from repro.core.dispatch import dispatch
+    path = os.path.join(str(tmp_path), f"{autotune.device_kind()}.json")
+    dispatch(a, b, "M16", backend="pallas_interpret")
+    assert not os.path.exists(path)        # flag off: pure table read
+    monkeypatch.setenv("REPRO_MP_AUTOTUNE", "1")   # flip AFTER first call
+    dispatch(a, b, "M16", backend="pallas_interpret")
+    assert os.path.exists(path)            # live shim: the sweep ran
+    autotune.clear_memory_cache()
+
+
+def test_policy_is_immutable():
+    pol = mp.PrecisionPolicy()
+    with pytest.raises(AttributeError):
+        pol.anything = 1
+
+
+# ------------------------------------------------- dgrad/wgrad mode split
+def test_dgrad_wgrad_run_at_different_modes():
+    """The formerly-dead bwd_wgrad wiring: dA must come out at dgrad_mode and
+    dB at wgrad_mode (proven against manually-computed per-mode products)."""
+    rng = np.random.default_rng(9)
+    a, b = _rand(rng, (24, 48)), _rand(rng, (48, 16))
+
+    def loss(a, b):
+        return jnp.sum(mp.mp_matmul(a, b, "M16", dgrad_mode="M8",
+                                    wgrad_mode="M23"))
+
+    da, db = jax.grad(loss, argnums=(0, 1))(a, b)
+    g = jnp.ones((24, 16), jnp.float32)
+    da_want = mp.mp_matmul(g, b.T, "M8")       # dgrad at M8
+    db_want = mp.mp_matmul(a.T, g, "M23")      # wgrad at M23
+    np.testing.assert_array_equal(np.asarray(da), np.asarray(da_want))
+    np.testing.assert_array_equal(np.asarray(db), np.asarray(db_want))
+    # and the two backward formats genuinely differ numerically
+    da_m23 = mp.mp_matmul(g, b.T, "M23")
+    assert not np.array_equal(np.asarray(da_want), np.asarray(da_m23))
+
+
+def test_backward_formats_observed_by_backend():
+    seen = []
+
+    def recording(a, b, fmt, out_dtype):
+        seen.append(fmt.name)
+        return ref.mp_matmul_ref(a, b, fmt, out_dtype=out_dtype)
+
+    mp.register_backend("recording_bwd", recording)
+    try:
+        rng = np.random.default_rng(4)
+        a, b = _rand(rng, (8, 16)), _rand(rng, (16, 8))
+        jax.grad(lambda a, b: jnp.sum(
+            mp.mp_matmul(a, b, "M16", dgrad_mode="M8", wgrad_mode="M23",
+                         backend="recording_bwd")))(a, b)
+        assert seen == ["M16", "M8", "M23"]  # fwd, dgrad, wgrad
+    finally:
+        mp.unregister_backend("recording_bwd")
+
+
+def test_bwd_mode_sets_both():
+    rng = np.random.default_rng(5)
+    a, b = _rand(rng, (8, 16)), _rand(rng, (16, 8))
+    loss_v1 = jax.grad(lambda a, b: jnp.sum(
+        mp.mp_matmul(a, b, "M16", bwd_mode="M23")), argnums=(0, 1))
+    loss_v2 = jax.grad(lambda a, b: jnp.sum(
+        mp.mp_matmul(a, b, "M16", dgrad_mode="M23", wgrad_mode="M23")),
+        argnums=(0, 1))
+    for x, y in zip(loss_v1(a, b), loss_v2(a, b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------ context
+def test_context_scoped_backend():
+    assert mp.current_context().backend == "ref"
+    with mp.context(backend="pallas_interpret"):
+        assert mp.current_context().backend == "pallas_interpret"
+        with mp.context(backend="sharded"):
+            assert mp.current_context().backend == "sharded"
+        assert mp.current_context().backend == "pallas_interpret"
+    assert mp.current_context().backend == "ref"
+    with pytest.raises(ValueError):
+        with mp.context(backend="nope"):
+            pass
+
+
+def test_context_reproduces_v1_use_backend_plus_policy():
+    """Acceptance: with mp.context(backend=..., policy=...) must reproduce the
+    v1 use_backend + explicit-policy behavior through the real model path."""
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = {"tokens": jnp.asarray(np.arange(24).reshape(2, 12) % cfg.vocab)}
+    pol = mp.PrecisionPolicy({"lm_head": "M23", "*": "M8"})
+
+    # v1 spelling (deprecated shim) with the policy passed explicitly
+    with pytest.deprecated_call():
+        from repro.core import use_backend
+        with use_backend("pallas_interpret"):
+            want, _, _ = T.forward(params, toks, cfg, pol)
+
+    # v2 spelling: one context carries both; the trainer/engine pick the
+    # policy up from the context
+    with mp.context(backend="pallas_interpret", policy=pol):
+        ctx = mp.current_context()
+        assert ctx.backend == "pallas_interpret" and ctx.policy is pol
+        got, _, _ = T.forward(params, toks, cfg, ctx.policy)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_configure_replaces_global_and_env_shims(monkeypatch):
+    context_lib.reset_context()
+    try:
+        mp.configure(backend="pallas_interpret", auto_tol=2.0**-6)
+        assert mp.current_context().backend == "pallas_interpret"
+        assert mp.current_context().auto_tol == 2.0**-6
+        # scoped overrides stack on the configured default
+        with mp.context(autotune=True):
+            assert mp.current_context().backend == "pallas_interpret"
+            assert mp.current_context().autotune
+        with pytest.raises(ValueError):
+            mp.configure(backend="nope")
+    finally:
+        context_lib.reset_context()
+    # deprecated env shims populate the default context on first read
+    monkeypatch.setenv("REPRO_MP_BACKEND", "sharded")
+    monkeypatch.setenv("REPRO_MP_AUTOTUNE", "1")
+    context_lib.reset_context()
+    try:
+        assert mp.current_context().backend == "sharded"
+        assert context_lib.autotune_enabled()   # live env shim
+        # an explicitly configured False must beat the env shim (the v2 API
+        # "replaces" the env var, so it cannot be enable-only)
+        with mp.context(autotune=False):
+            assert not context_lib.autotune_enabled()
+        mp.configure(autotune=False)
+        assert not context_lib.autotune_enabled()
+    finally:
+        monkeypatch.delenv("REPRO_MP_BACKEND")
+        monkeypatch.delenv("REPRO_MP_AUTOTUNE")
+        context_lib.reset_context()
+    # the v1 setter survives as a context-mutating shim
+    with pytest.deprecated_call():
+        from repro.core import set_default_backend
+        set_default_backend("pallas_interpret")
+    assert mp.current_context().backend == "pallas_interpret"
+    context_lib.reset_context()
+    assert mp.current_context().backend == "ref"
+
+
+def test_no_module_level_backend_global():
+    """Acceptance: the mutable default-backend global is gone — dispatch
+    state lives in the PrecisionContext."""
+    from repro.core import dispatch
+    assert not hasattr(dispatch, "_DEFAULT_BACKEND")
+
+
+def test_context_is_thread_safe():
+    results = {}
+    barrier = threading.Barrier(2)
+
+    def worker(name, backend):
+        with mp.context(backend=backend):
+            barrier.wait(timeout=10)  # both threads inside their contexts
+            results[name] = mp.current_context().backend
+
+    threads = [threading.Thread(target=worker, args=("a", "pallas_interpret")),
+               threading.Thread(target=worker, args=("b", "sharded"))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert results == {"a": "pallas_interpret", "b": "sharded"}
+    assert mp.current_context().backend == "ref"
+
+
+def test_context_json_round_trip(m30):
+    pol = mp.PrecisionPolicy({"*": "M30"})
+    ctx = mp.PrecisionContext(backend="sharded", policy=pol,
+                              auto_candidates=("M8", "M30"),
+                              auto_tol=2.0**-9, autotune=True)
+    ctx2 = mp.PrecisionContext.from_json(ctx.to_json())
+    assert ctx2.backend == "sharded"
+    assert ctx2.policy == pol
+    assert tuple(ctx2.auto_candidates) == ("M8", "M30")
+    assert ctx2.auto_tol == 2.0**-9 and ctx2.autotune
+
+
+def test_context_auto_candidates_drive_auto_mode(m30):
+    """mp_matmul(mode=AUTO) reads candidates + tol from the context."""
+    rng = np.random.default_rng(11)
+    a, b = _rand(rng, (16, 32)), _rand(rng, (32, 8))
+    gold = ref.matmul_golden_f64(a, b)
+    with mp.context(auto_candidates=("M8", "M30")):
+        out = mp.mp_matmul(a, b, mp.AUTO)
+    assert _rel(out, gold) < m30.rel_err_bound
+    # loose tolerance in the context makes AUTO settle for one limb
+    with mp.context(auto_candidates=("M8", "M30"), auto_tol=2.0**-2):
+        out_loose = mp.mp_matmul(a, b, mp.AUTO)
+    assert _rel(out_loose, gold) > m30.rel_err_bound
+
+
+# -------------------------------------------------------------- auto_report
+def test_auto_report_honors_tol():
+    """Satellite fix: the report must analyze at the caller's tol, not the
+    default — selection and explanation previously disagreed."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(1.0 + rng.uniform(2.0**-11, 2.0**-10, (32, 32)),
+                    jnp.float32)
+    strict = mp.auto_report(x, x)                 # default tol 2^-13
+    loose = mp.auto_report(x, x, tol=2.0**-6)
+    assert strict["sig_limbs_a"] == 2
+    assert loose["sig_limbs_a"] == 1              # tol reached the analyzer
+    assert loose["tol"] == 2.0**-6
+    assert strict["selected_mode"] != loose["selected_mode"]
+    assert loose["selected_format"] == "M8"
+
+
+# ------------------------------------------------------------------ serving
+def test_serve_set_policy_swaps_mode_mid_stream():
+    """Satellite: the serving control endpoint accepts a JSON policy payload
+    and subsequent steps run at the new formats."""
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.serve.engine import ServeEngine
+
+    seen = []
+
+    def recording(a, b, fmt, out_dtype):
+        seen.append(fmt.name)
+        return ref.mp_matmul_ref(a, b, fmt, out_dtype=out_dtype)
+
+    mp.register_backend("recording_serve", recording)
+    try:
+        cfg = get_config("paper-mpfp-100m", smoke=True)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, max_batch=2, max_seq=48,
+                          matmul_backend="recording_serve")
+        prompt = [np.asarray([1, 2, 3], np.int32)]
+        toks_before = eng.generate(prompt, max_new=2)
+        before = set(seen)
+        assert before and "M23" not in before     # serve_default: M8/M16
+
+        seen.clear()
+        payload = mp.PrecisionPolicy.full_fp32().to_json()
+        applied = eng.set_policy(payload)          # JSON wire format
+        assert applied.mode("ffn").name == "M23"
+        toks_after = eng.generate(prompt, max_new=2)
+        after = set(seen)
+        assert after == {"M23"}                    # the swap changed the mode
+        assert len(toks_before) == len(toks_after) == 1
+
+        # swapping back reuses the cached jit'd steps (no re-trace: the
+        # recording backend only fires at trace time)
+        seen.clear()
+        eng.set_policy(mp.PrecisionPolicy.serve_default())
+        eng.generate(prompt, max_new=2)
+        assert not seen
+    finally:
+        mp.unregister_backend("recording_serve")
+
+
+def test_trainer_picks_policy_from_context():
+    from repro.configs.registry import get_config
+    from repro.train import trainer as trainer_lib
+
+    cfg = get_config("paper-mpfp-100m", smoke=True)
+    pol = mp.PrecisionPolicy({"*": "M8"})
+    with mp.context(policy=pol):
+        tr = trainer_lib.Trainer(cfg, trainer_lib.TrainerConfig())
+    assert tr.policy is pol
+
+
+# ----------------------------------------------------- autotune context flag
+def test_autotune_flag_rides_context(tmp_path, monkeypatch):
+    """dispatch's pallas route only sweeps when the context's autotune flag
+    is set; otherwise it is a pure table read."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE_DIR", str(tmp_path))
+    autotune.clear_memory_cache()
+    rng = np.random.default_rng(6)
+    a, b = _rand(rng, (32, 64)), _rand(rng, (64, 32))
+    from repro.core.dispatch import dispatch
+    out = dispatch(a, b, "M16", backend="pallas_interpret")
+    # no sweep ran: the on-disk table was never created
+    assert not os.path.exists(os.path.join(
+        str(tmp_path), f"{autotune.device_kind()}.json"))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(dispatch(a, b, "M16", backend="ref")),
+        rtol=3e-6, atol=2e-5)
+    autotune.clear_memory_cache()

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, schedules, data pipeline, checkpointing,
 gradient compression, serve engine."""
-import os
 
 import numpy as np
 import pytest

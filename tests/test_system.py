@@ -1,7 +1,6 @@
 """End-to-end system behaviour: train -> checkpoint -> restore -> serve, plus
 a small-mesh lower+compile of the production step functions (the CI-sized
 twin of the 512-device dry-run)."""
-import os
 
 import numpy as np
 import pytest
@@ -10,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.core.policy import PrecisionPolicy, get_policy
-from repro.checkpoint import checkpoint as ckpt
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import transformer as T
 from repro.optim import adamw
