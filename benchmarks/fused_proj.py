@@ -1,0 +1,80 @@
+"""Fused-vs-sequential projection groups (ISSUE 3 / EXPERIMENTS.md §Perf.7).
+
+Measures the operand-sharing win directly: a SwiGLU gate+up pair and a QKV
+triple, once as 2-3 separate ``mp_dense`` calls (x re-read and re-limbed per
+call, intermediates round-tripping HBM) and once as ONE ``mp_fused_proj``
+group (x limbed once, epilogue in the flush).  Calls run eagerly on the ref
+backend so each variant pays exactly the ops it issues — under one jit, XLA's
+CSE could dedupe the sequential path's repeated limb extraction and hide the
+very cost the fused API removes by construction.  On CPU the numbers rank
+variants; rooflines give the hardware view.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core.mpmatmul import mp_dense, mp_qkv_proj, mp_swiglu
+
+# transformer-ish cell, CPU-sized: M = B*S tokens
+M, D, FF = 512, 512, 1024
+HEADS_N, KV_N = 512, 128  # GQA: wq wider than wk/wv (concat-N kernel path)
+MODES = ("M16", "M23")
+
+
+def _mlp_pair(rng):
+    x = jnp.asarray(rng.standard_normal((M, D)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((D, FF)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((D, FF)), jnp.float32)
+    return x, wg, wu
+
+
+def _qkv_triple(rng):
+    x = jnp.asarray(rng.standard_normal((M, D)), jnp.float32)
+    wq = jnp.asarray(rng.standard_normal((D, HEADS_N)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((D, KV_N)), jnp.float32)
+    wv = jnp.asarray(rng.standard_normal((D, KV_N)), jnp.float32)
+    return x, wq, wk, wv
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x, wg, wu = _mlp_pair(rng)
+    xq, wq, wk, wv = _qkv_triple(rng)
+
+    def mlp_seq(x, wg, wu, mode):
+        g = mp_dense(x, wg, mode, backend="ref")
+        u = mp_dense(x, wu, mode, backend="ref")
+        return jax.nn.silu(g) * u
+
+    def mlp_fused(x, wg, wu, mode):
+        return mp_swiglu(x, wg, wu, mode, backend="ref")
+
+    def qkv_seq(x, mode):
+        return (mp_dense(x, wq, mode, backend="ref"),
+                mp_dense(x, wk, mode, backend="ref"),
+                mp_dense(x, wv, mode, backend="ref"))
+
+    def qkv_fused(x, mode):
+        return mp_qkv_proj(x, wq, wk, wv, mode, backend="ref")
+
+    for mode in MODES:
+        t_seq = common.time_us(mlp_seq, x, wg, wu, mode)
+        t_fus = common.time_us(mlp_fused, x, wg, wu, mode)
+        common.emit(f"fused_proj/mlp_seq_{mode}", t_seq,
+                    f"2x mp_dense {M}x{D}x{FF} + HBM silu-combine")
+        common.emit(f"fused_proj/mlp_fused_{mode}", t_fus,
+                    f"speedup={t_seq / t_fus:.2f}x (A limbed 1x not 2x)")
+        t_seq = common.time_us(qkv_seq, xq, mode)
+        t_fus = common.time_us(qkv_fused, xq, mode)
+        common.emit(f"fused_proj/qkv_seq_{mode}", t_seq,
+                    f"3x mp_dense {M}x{D}x[{HEADS_N},{KV_N},{KV_N}]")
+        common.emit(f"fused_proj/qkv_fused_{mode}", t_fus,
+                    f"speedup={t_seq / t_fus:.2f}x (A limbed 1x not 3x)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -17,7 +17,7 @@ def main() -> None:
                     help="artifact path ('' disables the JSON sink)")
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, common, e2e_train, roofline,
+    from benchmarks import (accuracy, common, e2e_train, fused_proj, roofline,
                             table2_multiplier, table3_fp_units,
                             table4_comparison)
 
@@ -25,6 +25,7 @@ def main() -> None:
     table2_multiplier.run()
     table3_fp_units.run()
     table4_comparison.run()
+    fused_proj.run()
     accuracy.run()
     e2e_train.run()
     roofline.run()

@@ -45,10 +45,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import context as context_lib
 from repro.core.formats import FormatLike, MPFormat, resolve
-from repro.core.limbs import DD
+from repro.core.limbs import DD, PrelimbedWeight
 from repro.kernels import ref as ref_backend
 
-Operand = Union[jax.Array, DD]
+Operand = Union[jax.Array, DD, PrelimbedWeight]
 
 BACKENDS = ("ref", "pallas", "pallas_interpret", "sharded")
 
@@ -171,7 +171,8 @@ def _run_sharded(a: Operand, b: Operand, fmt: MPFormat, out_dtype,
     contraction cannot help (DD operands, both-batched einsums, 1 device)
     or cannot work (already inside a shard_map scope).  The mesh comes from
     the call, else the active context, else the default 1-D matmul mesh."""
-    if isinstance(a, DD) or isinstance(b, DD) or b.ndim != 2:
+    if isinstance(a, (DD, PrelimbedWeight)) or isinstance(b, (DD, PrelimbedWeight)) \
+            or b.ndim != 2:
         return _run_ref(a, b, fmt, out_dtype)
     if _bound_axis_names():
         return _run_ref(a, b, fmt, out_dtype)
@@ -263,3 +264,81 @@ def dispatch(
     if fn is None:
         raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
     return fn(a, b, resolve(mode), out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-output projections (operand-shared A)
+# ---------------------------------------------------------------------------
+def _tuned_blocks_fused(x, ws, fmt: MPFormat, interpret: bool,
+                        gate: str, has_bias: bool, has_res: bool):
+    """Autotune-table lookup for the multi-output fused-projection kernel.
+
+    Mirrors the ops layer's shape handling: equal-width weights stack
+    (n_out > 1), unequal widths concatenate along N (n_out = 1, N = ΣN)."""
+    from repro.kernels import mp_matmul as kern  # deferred: imports pallas
+    from repro.kernels import autotune
+
+    M = 1
+    for d in x.shape[:-1]:
+        M *= d
+    K = x.shape[-1]
+    Ns = [w.shape[-1] for w in ws]
+    if len(set(Ns)) == 1 and len(ws) > 1:
+        n_out, N = len(ws), Ns[0]
+    else:
+        n_out, N = 1, sum(Ns)
+    desc = kern.epilogue_desc(gate, has_bias, has_res)
+    if context_lib.autotune_enabled():
+        return autotune.autotune(M, K, N, fmt, dtype=jnp.float32,
+                                 interpret=interpret, n_out=n_out,
+                                 epilogue=desc)
+    blocks = autotune.lookup(M, K, N, fmt, n_out=n_out, epilogue=desc)
+    return blocks if blocks is not None else (None, None, None)
+
+
+def dispatch_fused(
+    x: jax.Array,
+    ws,
+    mode: FormatLike,
+    *,
+    gate: str = "none",
+    biases=None,
+    residual=None,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+):
+    """Route one fused projection group (one A operand, ``n_out`` weights,
+    epilogue lattice) to a backend.
+
+    ref/sharded run the XLA realization that still shares the one-time A limb
+    decomposition (``kernels/ref.mp_fused_proj_ref``); pallas variants run
+    the multi-output kernel.  Backends registered via
+    :func:`register_backend` see per-branch ``dispatch`` calls with the
+    epilogue applied outside (they only advertise the binary contract).
+    """
+    name = backend or context_lib.current_context().backend
+    fmt = resolve(mode)
+    ws = tuple(ws)
+    if name in ("ref", "sharded"):
+        # sharded: K-sharding each branch would psum n_out× per group; the
+        # XLA path shares the A decomposition and lets GSPMD place the
+        # collectives — the fused win without bespoke shard_map plumbing.
+        return ref_backend.mp_fused_proj_ref(
+            x, ws, fmt, gate=gate, biases=biases, residual=residual,
+            out_dtype=out_dtype)
+    if name in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as pallas_backend  # deferred: pallas
+
+        interpret = name == "pallas_interpret" or jax.default_backend() == "cpu"
+        bm, bk, bn = _tuned_blocks_fused(
+            x, ws, fmt, interpret, gate, biases is not None,
+            residual is not None)
+        return pallas_backend.mp_fused_proj_pallas(
+            x, ws, fmt, gate=gate, biases=biases, residual=residual,
+            out_dtype=out_dtype, interpret=interpret, bm=bm, bk=bk, bn=bn)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
+    raws = [dispatch(x, w, fmt, backend=name, out_dtype=jnp.float32)
+            for w in ws]
+    return ref_backend.apply_epilogue(raws, gate=gate, biases=biases,
+                                      residual=residual, out_dtype=out_dtype)

@@ -34,6 +34,44 @@ class DD(NamedTuple):
         return self.hi.dtype
 
 
+class PrelimbedWeight(NamedTuple):
+    """A weight operand carried as its pre-extracted bf16 limb stack.
+
+    ``limbs`` has shape (..., L, K, N): the last three dims are the limb
+    stack of one (K, N) matrix; leading dims (stacked per-layer weights) ride
+    along so ``lax.scan`` slices a layer's (L, K, N) stack out naturally.
+    Serving decomposes each weight ONCE per (policy, params) — decode steps
+    then skip the per-step B-limb VPU cascade entirely (the kernel's
+    ``prelimbed_b`` variant).  Inference-only, like :class:`DD`: no VJP
+    routes through it.  A mode needing more limbs than stored computes at the
+    stored precision (missing limbs are zero).
+    """
+
+    limbs: jax.Array  # (..., L, K, N) bf16
+
+    @property
+    def shape(self):
+        """Shape of the weight *value* the limb stack represents."""
+        return self.limbs.shape[:-3] + self.limbs.shape[-2:]
+
+    @property
+    def ndim(self) -> int:
+        return self.limbs.ndim - 1
+
+    @property
+    def n_limbs(self) -> int:
+        return self.limbs.shape[-3]
+
+
+def prelimb_weight(w: jax.Array, n_limbs: int) -> PrelimbedWeight:
+    """Pure-jnp prelimb of a (..., K, N) weight (serving uses the Pallas
+    decompose kernel via kernels/ops.decompose_weights; this is the oracle)."""
+    stacked = decompose(w, n_limbs)  # (L, ..., K, N)
+    order = tuple(range(1, stacked.ndim - 2)) + (0, stacked.ndim - 2,
+                                                 stacked.ndim - 1)
+    return PrelimbedWeight(jnp.transpose(stacked, order))
+
+
 def dd_from_f64(x64: np.ndarray) -> DD:
     """Split a float64 numpy array into a DD pair (host-side helper)."""
     hi = x64.astype(np.float32)

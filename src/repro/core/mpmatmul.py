@@ -38,10 +38,11 @@ from repro.core.dispatch import (  # noqa: F401  (re-exported public API)
     use_backend,
 )
 from repro.core.formats import FormatLike, is_auto, resolve
-from repro.core.limbs import DD
+from repro.core.limbs import DD, PrelimbedWeight
 from repro.core.modes import PrecisionMode
+from repro.kernels import ref as _ref_backend
 
-Operand = Union[jax.Array, DD]
+Operand = Union[jax.Array, DD, PrelimbedWeight]
 
 
 def _run(a: Operand, b: Operand, fmt, backend: Optional[str],
@@ -127,6 +128,11 @@ def mp_matmul(
     dgrad = _resolve_bwd(dgrad_mode if dgrad_mode is not None else bwd_mode)
     wgrad = _resolve_bwd(wgrad_mode if wgrad_mode is not None else bwd_mode)
     if is_auto(mode):
+        if isinstance(a, PrelimbedWeight) or isinstance(b, PrelimbedWeight):
+            raise TypeError(
+                "AUTO mode analyzes raw operand values; pre-limbed weights "
+                "carry only a fixed limb stack — resolve a static format "
+                "first (serving skips pre-limbing under AUTO policies)")
         from repro.core import auto  # circular-import avoidance
 
         return auto.mp_matmul_auto(
@@ -134,8 +140,9 @@ def mp_matmul(
             dgrad_mode=dgrad, wgrad_mode=wgrad,
         )
     fmt = resolve(mode)
-    if isinstance(a, DD) or isinstance(b, DD):
-        # DD operands: inference-only path (no VJP through two-float repr)
+    if isinstance(a, (DD, PrelimbedWeight)) or isinstance(b, (DD, PrelimbedWeight)):
+        # DD / pre-limbed operands: inference-only path (no VJP through the
+        # decomposed representations; serving decode never differentiates)
         return _run(a, b, fmt, backend, out_dtype)
     return _mp_matmul_diff(a, b, fmt, dgrad, wgrad, backend, out_dtype)
 
@@ -158,6 +165,189 @@ def mp_dense(
     unflattened operand directly."""
     return mp_matmul(x, w, mode, bwd_mode=bwd_mode, dgrad_mode=dgrad_mode,
                      wgrad_mode=wgrad_mode, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Operand-shared fused projections (QKV, SwiGLU gate+up, fused epilogues)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _mp_fused_proj_diff(x, ws, biases, residual, fmt, dgrad_fmt, wgrad_fmt,
+                        backend, out_dtype, gate):
+    return dispatch_lib.dispatch_fused(
+        x, ws, fmt, gate=gate, biases=biases, residual=residual,
+        backend=backend, out_dtype=out_dtype)
+
+
+def _fused_fwd(x, ws, biases, residual, fmt, dgrad_fmt, wgrad_fmt, backend,
+               out_dtype, gate):
+    # Under AD the raw (pre-gate, post-bias) branch outputs double as VJP
+    # residuals, so the fused call runs WITHOUT the combine epilogue (A is
+    # still read and limb-decomposed once) and the epilogue applies outside
+    # the kernel — inference keeps the fully-fused primal above.
+    raws = dispatch_lib.dispatch_fused(
+        x, ws, fmt, gate="none", biases=biases, residual=None,
+        backend=backend, out_dtype=jnp.float32)
+    if not isinstance(raws, tuple):
+        raws = (raws,)
+    # biases are already folded into raws; only gate/residual remain
+    out = _ref_backend.apply_epilogue(raws, gate=gate, residual=residual,
+                                      out_dtype=out_dtype)
+    return out, (x, ws, raws, biases, residual)
+
+
+def _fused_bwd(fmt, dgrad_fmt, wgrad_fmt, backend, out_dtype, gate, res, g):
+    x, ws, raws, biases, residual = res
+    bias_dtypes = None if biases is None else tuple(b.dtype for b in biases)
+    res_dtype = None if residual is None else residual.dtype
+    dg = dgrad_fmt if dgrad_fmt is not None else fmt
+    wg = wgrad_fmt if wgrad_fmt is not None else fmt
+    if gate == "swiglu":
+        gg = g.astype(jnp.float32)
+        a, u = raws
+        sig = jax.nn.sigmoid(a)
+        # d silu(a)/da = sig * (1 + a * (1 - sig))
+        d_raws = (gg * u * sig * (1.0 + a * (1.0 - sig)), gg * (a * sig))
+    else:
+        gs = g if isinstance(g, (tuple, list)) else (g,)
+        d_raws = tuple(t.astype(jnp.float32) for t in gs)
+    d_res = None if res_dtype is None else (
+        g.astype(jnp.float32).astype(res_dtype))
+    # per-branch dispatch calls at the policy's backward formats: the fused
+    # forward changes neither the backward contractions nor their mode-split
+    dx = None
+    dws = []
+    for w, dr in zip(ws, d_raws):
+        da = _run(dr, jnp.swapaxes(w, -1, -2), dg, backend, jnp.float32)
+        dx = da if dx is None else dx + da
+        if x.ndim > 2:
+            dw = _ref_backend.mp_wgrad_ref(x, dr, wg)
+        else:
+            dw = _run(jnp.swapaxes(x, -1, -2), dr, wg, backend, jnp.float32)
+        dws.append(dw.astype(w.dtype))
+    d_biases = None
+    if bias_dtypes is not None:
+        d_biases = tuple(
+            jnp.sum(dr, axis=tuple(range(dr.ndim - 1))).astype(dt)
+            for dr, dt in zip(d_raws, bias_dtypes))
+    return dx.astype(x.dtype), tuple(dws), d_biases, d_res
+
+
+_mp_fused_proj_diff.defvjp(_fused_fwd, _fused_bwd)
+
+
+def _sequential_fused(x, ws, mode, *, epilogue, biases, residual, dgrad,
+                      wgrad, backend, out_dtype):
+    """Per-branch mp_matmul fallback (pre-limbed/DD operands, AUTO mode):
+    no A-sharing kernel, but the same epilogue math and mode-split."""
+    raws = [mp_matmul(x, w, mode, dgrad_mode=dgrad, wgrad_mode=wgrad,
+                      backend=backend, out_dtype=jnp.float32) for w in ws]
+    return _ref_backend.apply_epilogue(raws, gate=epilogue, biases=biases,
+                                       residual=residual, out_dtype=out_dtype)
+
+
+def mp_fused_proj(
+    x: jax.Array,
+    ws,
+    mode: FormatLike = PrecisionMode.M16,
+    *,
+    epilogue: str = "none",
+    biases=None,
+    residual: Optional[jax.Array] = None,
+    bwd_mode: Optional[FormatLike] = None,
+    dgrad_mode: Optional[FormatLike] = None,
+    wgrad_mode: Optional[FormatLike] = None,
+    backend: Optional[str] = None,
+    out_dtype: jnp.dtype = jnp.float32,
+):
+    """Fused projection group: ``n_out`` contractions of ONE activation
+    operand against stacked weights, sharing x's HBM read and limb
+    decomposition across the group (DESIGN.md §4).
+
+    x: (..., K); ws: sequence of (K, N_t) weights.  Returns a tuple of
+    (..., N_t) outputs, or a single array when ``epilogue="swiglu"``
+    combines them (``silu(x@ws[0]) * (x@ws[1])``) or ``len(ws) == 1``.
+    ``biases`` (per-output (N_t,) vectors) and ``residual`` (added to the
+    single final output) fold into the kernel's flush stage, so fused-MLP
+    intermediates never round-trip HBM.  Differentiable: the custom VJP
+    decomposes into per-branch dispatch calls at ``dgrad_mode`` /
+    ``wgrad_mode`` (both default to ``bwd_mode``, then ``mode``) — the
+    fusion changes no backward numerics.
+
+    Pre-limbed / DD weights and AUTO mode fall back to per-branch
+    ``mp_matmul`` calls with the same epilogue (serving decode hits the
+    pre-limbed kernel per branch; fusion there would re-extract limbs the
+    weights already carry).
+    """
+    ws = tuple(ws)
+    if not ws:
+        raise ValueError("mp_fused_proj needs at least one weight")
+    for w in ws:
+        if w.ndim != 2:
+            raise ValueError(
+                f"fused projection weights must be 2-D, got shape {w.shape}")
+    if epilogue not in ("none", "swiglu"):
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    if epilogue == "swiglu":
+        if len(ws) != 2:
+            raise ValueError("swiglu epilogue needs exactly 2 weights")
+        if ws[0].shape[-1] != ws[1].shape[-1]:
+            raise ValueError("swiglu gate/up weights must have equal width")
+    single_out = epilogue != "none" or len(ws) == 1
+    if residual is not None and not single_out:
+        raise ValueError("residual epilogue needs a single final output")
+    if biases is not None:
+        biases = tuple(biases)
+        if len(biases) != len(ws):
+            raise ValueError(
+                f"{len(biases)} biases for {len(ws)} weights")
+        if any(b is None for b in biases):
+            raise ValueError("biases must be all arrays or None (pass a "
+                             "zeros vector for a bias-free branch)")
+    backend = backend or context_lib.current_context().backend
+    dgrad = _resolve_bwd(dgrad_mode if dgrad_mode is not None else bwd_mode)
+    wgrad = _resolve_bwd(wgrad_mode if wgrad_mode is not None else bwd_mode)
+    prelimbed = (isinstance(x, (DD, PrelimbedWeight))
+                 or any(isinstance(w, (DD, PrelimbedWeight)) for w in ws))
+    if prelimbed or is_auto(mode):
+        return _sequential_fused(
+            x, ws, mode, epilogue=epilogue, biases=biases, residual=residual,
+            dgrad=dgrad, wgrad=wgrad, backend=backend, out_dtype=out_dtype)
+    fmt = resolve(mode)
+    return _mp_fused_proj_diff(x, ws, biases, residual, fmt, dgrad, wgrad,
+                               backend, out_dtype, epilogue)
+
+
+def mp_swiglu(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    mode: FormatLike = PrecisionMode.M16,
+    *,
+    biases=None,
+    residual: Optional[jax.Array] = None,
+    **kw,
+) -> jax.Array:
+    """Fused SwiGLU half-MLP: ``silu(x @ w_gate) * (x @ w_up)`` in one
+    kernel — x read and limb-decomposed once, the gate combine applied in
+    the flush so neither branch materializes in HBM."""
+    return mp_fused_proj(x, (w_gate, w_up), mode, epilogue="swiglu",
+                         biases=biases, residual=residual, **kw)
+
+
+def mp_qkv_proj(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    mode: FormatLike = PrecisionMode.M16,
+    *,
+    biases=None,
+    **kw,
+):
+    """Fused attention input projections: (q, k, v) from one pass over x.
+    GQA widths (wk/wv narrower than wq) are handled by the ops layer
+    (concat-N single contraction, outputs sliced apart)."""
+    return mp_fused_proj(x, (wq, wk, wv), mode, biases=biases, **kw)
 
 
 def mp_einsum_qk(

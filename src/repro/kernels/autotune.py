@@ -64,11 +64,19 @@ def _cache_path(kind: Optional[str] = None) -> str:
     return os.path.join(cache_dir(), f"{kind or device_kind()}.json")
 
 
-def table_key(M: int, K: int, N: int, mode: FormatLike, dtype) -> str:
+def table_key(M: int, K: int, N: int, mode: FormatLike, dtype, *,
+              n_out: int = 1, epilogue: str = "none") -> str:
     """Cache key: the resolved *format name* keys the table, so run-time
     registered formats tune and persist exactly like the paper built-ins
-    (and built-in keys are unchanged from v1 — old tables stay valid)."""
-    return f"{resolve(mode).name}|{M}x{K}x{N}|{jnp.dtype(dtype).name}"
+    (and built-in keys are unchanged from v1 — old tables stay valid).
+
+    The multi-output fused-projection kernel adds ``(n_out, epilogue)`` key
+    dimensions (its VMEM shape differs: n_out× the B/accumulator side), but
+    only when non-default, so single-matmul keys are byte-identical to v1."""
+    base = f"{resolve(mode).name}|{M}x{K}x{N}|{jnp.dtype(dtype).name}"
+    if n_out != 1 or epilogue != "none":
+        base += f"|out{n_out}|{epilogue}"
+    return base
 
 
 def load_table(kind: Optional[str] = None) -> Dict[str, List[int]]:
@@ -101,6 +109,9 @@ def candidate_blocks(
     *,
     out_dtype=jnp.float32,
     vmem_budget: int = 0,
+    n_out: int = 1,
+    epilogue: str = "none",
+    variant: str = "fused",
 ) -> List[BlockSizes]:
     """Aligned (bm, bk, bn) candidates that fit the problem and the budget."""
     budget = vmem_budget or VMEM_BUDGET_BYTES
@@ -119,7 +130,8 @@ def candidate_blocks(
                         min(bk, _round_up(K, 128)),
                         min(bn, _round_up(N, 128)))
                 if kern.vmem_bytes(mode, cand[0], cand[1], cand[2],
-                                   out_dtype) > budget:
+                                   out_dtype, n_out=n_out, epilogue=epilogue,
+                                   variant=variant) > budget:
                     continue
                 if cand not in out:
                     out.append(cand)
@@ -127,18 +139,34 @@ def candidate_blocks(
 
 
 def _time_blocks(a, b, mode, blocks: BlockSizes, *, out_dtype, interpret,
-                 iters: int) -> float:
+                 iters: int, n_out: int = 1, epilogue: str = "none") -> float:
     from repro.kernels import ops  # deferred: ops imports this module
 
     bm, bk, bn = blocks
-    fn = jax.jit(lambda x, y: ops.mp_matmul_pallas(
-        x, y, mode, out_dtype=out_dtype, interpret=interpret,
-        bm=bm, bk=bk, bn=bn))
-    jax.block_until_ready(fn(a, b))  # compile
+    if n_out == 1 and epilogue == "none":
+        fn = jax.jit(lambda x, y: ops.mp_matmul_pallas(
+            x, y, mode, out_dtype=out_dtype, interpret=interpret,
+            bm=bm, bk=bk, bn=bn))
+        args = (a, b)
+    else:
+        # multi-output fused projection: b is the (n_out, K, N) weight stack;
+        # bias/residual operands are synthesized per the epilogue descriptor
+        gate = "swiglu" if "swiglu" in epilogue else "none"
+        biases = (tuple(jnp.zeros((b.shape[-1],), jnp.float32)
+                        for _ in range(n_out))
+                  if "bias" in epilogue else None)
+        residual = (jnp.zeros((a.shape[0], b.shape[-1]), jnp.float32)
+                    if "res" in epilogue else None)
+        fn = jax.jit(lambda x, ys: ops.mp_fused_proj_pallas(
+            x, tuple(ys[t] for t in range(n_out)), mode, gate=gate,
+            biases=biases, residual=residual, out_dtype=out_dtype,
+            interpret=interpret, bm=bm, bk=bk, bn=bn))
+        args = (a, b)
+    jax.block_until_ready(fn(*args))  # compile
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(a, b))
+        jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
@@ -153,20 +181,23 @@ def autotune(
     interpret: bool = False,
     iters: int = 3,
     candidates: Optional[Sequence[BlockSizes]] = None,
+    n_out: int = 1,
+    epilogue: str = "none",
 ) -> BlockSizes:
-    """Sweep candidates for one (mode, shape, dtype) cell; persist the winner.
+    """Sweep candidates for one (mode, shape, dtype, n_out, epilogue) cell;
+    persist the winner.
 
     Returns the cached winner immediately when the table already has the key
     (in-memory first, then the on-disk table for this device kind)."""
     mode = resolve(mode)
-    key = table_key(M, K, N, mode, dtype)
+    key = table_key(M, K, N, mode, dtype, n_out=n_out, epilogue=epilogue)
     table = load_table()
     if key in table:
         bm, bk, bn = table[key]
         return bm, bk, bn
 
     cands = list(candidates) if candidates is not None else candidate_blocks(
-        M, K, N, mode, out_dtype=out_dtype)
+        M, K, N, mode, out_dtype=out_dtype, n_out=n_out, epilogue=epilogue)
     if not cands:
         raise ValueError(
             f"no feasible block sizes for {key} under "
@@ -175,12 +206,16 @@ def autotune(
     import numpy as np
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.standard_normal((M, K)), dtype)
-    b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    if n_out == 1 and epilogue == "none":
+        b = jnp.asarray(rng.standard_normal((K, N)), dtype)
+    else:
+        b = jnp.asarray(rng.standard_normal((n_out, K, N)), dtype)
 
     best, best_t = None, float("inf")
     for cand in cands:
         t = _time_blocks(a, b, mode, cand, out_dtype=out_dtype,
-                         interpret=interpret, iters=iters)
+                         interpret=interpret, iters=iters, n_out=n_out,
+                         epilogue=epilogue)
         if t < best_t:
             best, best_t = cand, t
 
@@ -189,10 +224,11 @@ def autotune(
     return best
 
 
-def lookup(M: int, K: int, N: int, mode: FormatLike, dtype=jnp.float32
-           ) -> Optional[BlockSizes]:
+def lookup(M: int, K: int, N: int, mode: FormatLike, dtype=jnp.float32, *,
+           n_out: int = 1, epilogue: str = "none") -> Optional[BlockSizes]:
     """Cached winner or None — never triggers a sweep (the serving-safe path)."""
-    entry = load_table().get(table_key(M, K, N, mode, dtype))
+    entry = load_table().get(
+        table_key(M, K, N, mode, dtype, n_out=n_out, epilogue=epilogue))
     if entry is None:
         return None
     bm, bk, bn = entry

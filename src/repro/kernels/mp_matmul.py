@@ -24,6 +24,12 @@ Layout/tiling rationale (TPU v5e):
 VMEM budget per grid step (defaults bm=bn=256, bk=512, mode M23):
     A tile f32 512KB + B tile f32 512KB + limbs bf16 3*(256KB+256KB)
     + acc 3*256KB ≈ 3.3 MB  « 16 MB/core.
+
+Variants (DESIGN.md §4 table): single-output fused (training matmuls),
+multi-output fused (`_fused_multi_kernel`: ONE A tile + limb cascade shared
+across n_out stacked B operands, epilogue lattice in the flush — QKV/SwiGLU
+projection groups), pre-limbed B (serving decode), both pre-limbed (DD).
+``vmem_bytes`` models each variant's true footprint for the autotuner.
 """
 from __future__ import annotations
 
@@ -49,14 +55,17 @@ def _extract_limbs(x: jax.Array, n_limbs: int) -> list[jax.Array]:
     return limbs
 
 
-def _combine_orders(acc_ref, n_orders: int) -> jax.Array:
-    """Neumaier-compensated combine, smallest order-magnitude first."""
+def _combine_orders(acc_ref, n_orders: int, *, base=()) -> jax.Array:
+    """Neumaier-compensated combine, smallest order-magnitude first.
+
+    ``base`` prefixes the ref index — the multi-output kernel combines
+    ``acc_ref[t, o]`` per output slot ``t`` with the same compensation."""
     if n_orders == 1:
-        return acc_ref[0]
-    s = acc_ref[n_orders - 1]
+        return acc_ref[base + (0,)]
+    s = acc_ref[base + (n_orders - 1,)]
     c = jnp.zeros_like(s)
     for o in range(n_orders - 2, -1, -1):
-        t = acc_ref[o]
+        t = acc_ref[base + (o,)]
         tmp = s + t
         c = c + jnp.where(jnp.abs(s) >= jnp.abs(t), (s - tmp) + t, (t - tmp) + s)
         s = tmp
@@ -151,6 +160,155 @@ def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: MPFormat,
         o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
 
 
+# ---------------------------------------------------------------------------
+# Multi-output fused projection kernel: one A tile, n_out stacked B operands.
+# ---------------------------------------------------------------------------
+def epilogue_desc(gate: str = "none", has_bias: bool = False,
+                  has_residual: bool = False) -> str:
+    """Canonical descriptor of one point on the epilogue lattice — the string
+    that keys autotune tables and the VMEM model ("none", "bias",
+    "swiglu+bias+res", ...)."""
+    parts = []
+    if gate != "none":
+        parts.append(gate)
+    if has_bias:
+        parts.append("bias")
+    if has_residual:
+        parts.append("res")
+    return "+".join(parts) if parts else "none"
+
+
+def _fused_multi_kernel(*refs, spec: MPFormat, out_dtype, n_out: int,
+                        gate: str, has_bias: bool, has_residual: bool):
+    """Grid (Mi, Nj, Kk); A block (bm,bk) f32; n_out B blocks (bk,bn) f32.
+
+    The A tile is read and limb-decomposed ONCE per grid step and its limbs
+    feed every output's MXU passes — the operand-sharing optimization that
+    cuts a projection group's A-side HBM traffic and VPU limb cascades from
+    ``n_out×`` to ``1×``.  Each B operand is its own pallas input (no host-
+    side stack: weights stream from their parameter buffers untouched).  The
+    epilogue lattice (bias add, silu-gate combine, residual add) runs in the
+    flush, before the single HBM write, so fused MLP intermediates never
+    materialize in HBM.
+    """
+    a_ref = refs[0]
+    b_refs = refs[1:1 + n_out]
+    idx = 1 + n_out
+    bias_refs = refs[idx:idx + n_out] if has_bias else ()
+    idx += n_out if has_bias else 0
+    res_ref = refs[idx] if has_residual else None
+    o_ref, acc_ref = refs[-2], refs[-1]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    al = _extract_limbs(a, spec.n_limbs)  # ONCE, shared by all outputs
+
+    for t, b_ref in enumerate(b_refs):
+        bl = _extract_limbs(b_ref[...].astype(jnp.float32), spec.n_limbs)
+        for o in range(spec.max_order + 1):
+            terms = [
+                jnp.dot(al[i], bl[j], preferred_element_type=jnp.float32)
+                for (i, j) in spec.products
+                if i + j == o
+            ]
+            if not terms:
+                continue
+            tot = terms[0]
+            for tm in terms[1:]:
+                tot = tot + tm
+            acc_ref[t, o] += tot
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        outs = []
+        for t in range(n_out):
+            y = _combine_orders(acc_ref, spec.max_order + 1, base=(t,))
+            if has_bias:
+                y = y + bias_refs[t][...]  # (1, bn) broadcasts over bm
+            outs.append(y)
+        if gate == "swiglu":
+            y = jax.nn.silu(outs[0]) * outs[1]
+            if has_residual:
+                y = y + res_ref[...]
+            o_ref[...] = y.astype(out_dtype)
+        else:
+            if has_residual:  # only reachable with n_out == 1
+                outs[0] = outs[0] + res_ref[...]
+            for t in range(n_out):
+                o_ref[t] = outs[t].astype(out_dtype)
+
+
+def build_fused_multi_call(
+    M: int, K: int, N: int,
+    n_out: int,
+    mode: FormatLike,
+    *,
+    bm: int, bk: int, bn: int,
+    gate: str = "none",
+    has_bias: bool = False,
+    has_residual: bool = False,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """pallas_call for the multi-output fused projection kernel.
+
+    Inputs (padded shapes): A (M, K) f32; n_out SEPARATE B operands (K, N)
+    f32 — each streams from its own parameter buffer, no host-side stack
+    copy; optionally n_out biases (1, N) f32 and a residual (M, N) f32.
+    Output is (n_out, M, N), or (M, N) when ``gate`` combines the stack to
+    one array.  ``gate="swiglu"`` requires n_out == 2 (silu(out0) * out1); a
+    residual add needs a single final output (gated, or n_out == 1).
+    """
+    s = resolve(mode)
+    n_orders = s.max_order + 1
+    if gate == "swiglu" and n_out != 2:
+        raise ValueError(f"swiglu gate needs n_out == 2, got {n_out}")
+    if gate not in ("none", "swiglu"):
+        raise ValueError(f"unknown gate {gate!r}")
+    single_out = gate != "none" or n_out == 1
+    if has_residual and not single_out:
+        raise ValueError("residual epilogue needs a single final output")
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))]
+    in_specs += [pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+                 for _ in range(n_out)]
+    if has_bias:
+        in_specs += [pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+                     for _ in range(n_out)]
+    if has_residual:
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)))
+    if single_out and gate != "none":
+        out_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+        out_shape = jax.ShapeDtypeStruct((M, N), out_dtype)
+    else:
+        out_spec = pl.BlockSpec((n_out, bm, bn), lambda i, j, k: (0, i, j))
+        out_shape = jax.ShapeDtypeStruct((n_out, M, N), out_dtype)
+    cost = pl.CostEstimate(
+        flops=2 * M * K * N * s.n_products * n_out,
+        bytes_accessed=(M * K + n_out * K * N) * 4
+        + (M * N if single_out else n_out * M * N)
+        * jnp.dtype(out_dtype).itemsize,
+        transcendentals=M * N if gate == "swiglu" else 0,
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _fused_multi_kernel, spec=s, out_dtype=out_dtype, n_out=n_out,
+            gate=gate, has_bias=has_bias, has_residual=has_residual),
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((n_out, n_orders, bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        cost_estimate=cost,
+        interpret=interpret,
+    )
+
+
 def _compiler_params():
     for cls_name in ("CompilerParams", "TPUCompilerParams"):  # API drift guard
         cls = getattr(pltpu, cls_name, None)
@@ -163,18 +321,41 @@ def _compiler_params():
     return None
 
 
+KERNEL_VARIANTS = ("fused", "prelimbed_b", "prelimbed_both")
+
+
 def vmem_bytes(mode: FormatLike, bm: int, bk: int, bn: int,
-               out_dtype=jnp.float32) -> int:
-    """VMEM footprint of one fused-kernel grid step (the autotuner's feasibility
-    filter, kernels/autotune.py): A/B f32 tiles + on-the-fly bf16 limbs +
-    per-order f32 accumulators + the output tile."""
+               out_dtype=jnp.float32, *, n_out: int = 1,
+               variant: str = "fused", epilogue: str = "none") -> int:
+    """VMEM footprint of one grid step — the autotuner's feasibility filter
+    (kernels/autotune.py), per kernel variant:
+
+      fused           A/B arrive f32: f32 tiles + on-the-fly bf16 limbs
+      prelimbed_b     B arrives as bf16 limbs: no B f32 tile (serving path)
+      prelimbed_both  both arrive as bf16 limbs: no f32 tiles at all (DD)
+
+    ``n_out`` scales the B side, the accumulators, and the output stack for
+    the multi-output fused-projection kernel; ``epilogue`` is an
+    :func:`epilogue_desc` string — a gate combine collapses the output stack
+    to one tile, bias adds an (n_out, 1, bn) tile, a residual adds a
+    (bm, bn) input tile.
+    """
+    if variant not in KERNEL_VARIANTS:
+        raise ValueError(f"unknown kernel variant {variant!r}; "
+                         f"have {KERNEL_VARIANTS}")
     s = resolve(mode)
-    a_tile = bm * bk * 4
-    b_tile = bk * bn * 4
-    limbs = s.n_limbs * (bm * bk + bk * bn) * 2
-    acc = s.n_orders * bm * bn * 4
-    out = bm * bn * jnp.dtype(out_dtype).itemsize
-    return a_tile + b_tile + limbs + acc + out
+    a_f32 = bm * bk * 4 if variant != "prelimbed_both" else 0
+    b_f32 = n_out * bk * bn * 4 if variant == "fused" else 0
+    limbs = s.n_limbs * (bm * bk + n_out * bk * bn) * 2
+    acc = n_out * s.n_orders * bm * bn * 4
+    gated = "swiglu" in epilogue
+    out = (1 if gated else n_out) * bm * bn * jnp.dtype(out_dtype).itemsize
+    extra = 0
+    if "bias" in epilogue:
+        extra += n_out * bn * 4
+    if "res" in epilogue:
+        extra += bm * bn * 4
+    return a_f32 + b_f32 + limbs + acc + out + extra
 
 
 def build_fused_call(

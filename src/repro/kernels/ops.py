@@ -11,13 +11,14 @@ from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import limbs as limbs_lib
-from repro.core.limbs import DD
+from repro.core.limbs import DD, PrelimbedWeight
 from repro.core.formats import FormatLike, resolve
 from repro.kernels import mp_matmul as kern
 
-Operand = Union[jax.Array, DD]
+Operand = Union[jax.Array, DD, PrelimbedWeight]
 
 # default TPU-aligned tile sizes (fp32: multiples of (8,128); MXU: 128)
 DEFAULT_BM = 256
@@ -36,6 +37,30 @@ def _pick_blocks(M: int, K: int, N: int,
     bm = bm or min(DEFAULT_BM, _round_up(M, 8))
     bn = bn or min(DEFAULT_BN, _round_up(N, 128))
     bk = bk or min(DEFAULT_BK, _round_up(K, 128))
+    return bm, bk, bn
+
+
+def _clamp_vmem(mode, bm: int, bk: int, bn: int, out_dtype, *,
+                n_out: int = 1, variant: str = "fused",
+                epilogue: str = "none") -> Tuple[int, int, int]:
+    """Shrink blocks until the *variant's* true VMEM footprint fits the
+    autotune budget (kernels.mp_matmul.vmem_bytes) — the feasibility filter
+    for paths that pick blocks without a sweep (prelimbed serving kernels,
+    DD operands, untuned fused groups).  Tuned blocks already fit, so this
+    is a no-op for them; bk halves first (K steps are free reloads), then
+    bm, preserving (8, 128) tile alignment."""
+    from repro.kernels import autotune  # deferred: autotune imports ops
+
+    budget = autotune.VMEM_BUDGET_BYTES
+
+    def fits(bm_, bk_, bn_):
+        return kern.vmem_bytes(mode, bm_, bk_, bn_, out_dtype, n_out=n_out,
+                               variant=variant, epilogue=epilogue) <= budget
+
+    while not fits(bm, bk, bn) and bk > 128:
+        bk = max(128, bk // 2)
+    while not fits(bm, bk, bn) and bm > 8:
+        bm = max(8, bm // 2)
     return bm, bk, bn
 
 
@@ -76,6 +101,8 @@ def _matmul2d_dd(a: Operand, b: Operand, mode: FormatLike, out_dtype,
     K2, N = bl.shape[1:]
     assert K == K2
     bm, bk, bn = _pick_blocks(M, K, N, bm, bk, bn)
+    bm, bk, bn = _clamp_vmem(mode, bm, bk, bn, out_dtype,
+                             variant="prelimbed_both")
     Mp, Kp, Np = _round_up(M, bm), _round_up(K, bk), _round_up(N, bn)
     al = jnp.pad(al, [(0, 0), (0, Mp - M), (0, Kp - K)])
     bl = jnp.pad(bl, [(0, 0), (0, Kp - K), (0, Np - N)])
@@ -103,6 +130,11 @@ def mp_matmul_pallas(
     the batch folds into M — one big matmul, best MXU utilization) or vmap
     (when both are batched)."""
     mode = resolve(mode)
+    if isinstance(b, PrelimbedWeight) and not isinstance(a, (DD, PrelimbedWeight)):
+        assert b.ndim == 2, "prelimbed weights must be 2-D per matmul"
+        return mp_matmul_prelimbed_weights(
+            a, b.limbs, mode, out_dtype=out_dtype, interpret=interpret,
+            bm=bm, bk=bk, bn=bn)
     if isinstance(a, DD) or isinstance(b, DD):
         assert (a.hi.ndim if isinstance(a, DD) else a.ndim) == 2, (
             "DD path supports 2D operands")
@@ -126,6 +158,88 @@ def mp_matmul_pallas(
     return out.reshape(lead + out.shape[-2:])
 
 
+def mp_fused_proj_pallas(
+    x: jax.Array,
+    ws,
+    mode: FormatLike = "M16",
+    *,
+    gate: str = "none",
+    biases=None,
+    residual=None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+):
+    """Pallas-backed fused projection: x (..., K) against n_out weights.
+
+    Equal-width weights run the multi-output kernel, each weight streaming
+    as its OWN pallas operand (no host-side (n_out, K, N) stack copy).
+    Unequal widths (GQA: wq wider than wk/wv) concatenate along N into ONE
+    wide contraction — the A tile and its limbs are still read/extracted
+    once — and the outputs are sliced back apart; only valid when no gate
+    combine is requested (gate outputs must pair same-shaped operands, which
+    always holds for SwiGLU gate/up).
+    """
+    mode = resolve(mode)
+    ws = tuple(ws)
+    Ns = [w.shape[-1] for w in ws]
+    K = x.shape[-1]
+    lead = x.shape[:-1]
+    a = x.reshape(-1, K).astype(jnp.float32)
+    M = a.shape[0]
+
+    has_bias = biases is not None
+    if has_bias:
+        biases = tuple(b.astype(jnp.float32) for b in biases)
+    has_res = residual is not None
+
+    if len(set(Ns)) == 1:
+        N = Ns[0]
+        ws_eff = tuple(w.astype(jnp.float32) for w in ws)
+        splits = None
+    else:
+        if gate != "none":
+            raise ValueError("gate combine needs equal-width weights")
+        N = sum(Ns)
+        ws_eff = (jnp.concatenate([w.astype(jnp.float32) for w in ws],
+                                  axis=-1),)                 # (K, ΣN)
+        if has_bias:
+            biases = (jnp.concatenate(biases, axis=-1),)
+        splits = np.cumsum(Ns)[:-1]
+    n_out = len(ws_eff)
+    single_out = gate != "none" or (n_out == 1 and splits is None)
+
+    desc = kern.epilogue_desc(gate, has_bias, has_res)
+    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    bm_, bk_, bn_ = _clamp_vmem(mode, bm_, bk_, bn_, out_dtype,
+                                n_out=n_out, epilogue=desc)
+    Mp, Kp, Np = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
+    operands = [_pad2(a, Mp, Kp)]
+    operands += [_pad2(w, Kp, Np) for w in ws_eff]
+    if has_bias:
+        operands += [_pad2(b.reshape(1, N), 1, Np) for b in biases]
+    if has_res:
+        operands.append(_pad2(residual.reshape(-1, N).astype(jnp.float32),
+                              Mp, Np))
+    call = kern.build_fused_multi_call(
+        Mp, Kp, Np, n_out, mode, bm=bm_, bk=bk_, bn=bn_, gate=gate,
+        has_bias=has_bias, has_residual=has_res, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    out = call(*operands)
+    if gate != "none":
+        return out[:M, :N].reshape(lead + (N,))
+    out = out[:, :M, :N]
+    if splits is not None:
+        parts = jnp.split(out[0], splits, axis=-1)
+        return tuple(p.reshape(lead + (p.shape[-1],)) for p in parts)
+    if single_out:  # n_out == 1
+        return out[0].reshape(lead + (N,))
+    return tuple(out[t].reshape(lead + (N,)) for t in range(n_out))
+
+
 def mp_matmul_prelimbed_weights(
     x: jax.Array,
     w_limbs: jax.Array,
@@ -138,9 +252,16 @@ def mp_matmul_prelimbed_weights(
     bn: Optional[int] = None,
 ) -> jax.Array:
     """Serving fast path: weights decomposed once (``decompose_weights``),
-    activations limbed on the fly inside the kernel.  x (..., K) @ W (K, N)."""
+    activations limbed on the fly inside the kernel.  x (..., K) @ W (K, N).
+
+    A mode needing more limbs than were stored computes at the stored
+    precision: the missing limbs are zero by construction."""
     s = resolve(mode)
-    assert w_limbs.shape[0] >= s.n_limbs, "weight limbs < mode requirement"
+    if w_limbs.shape[0] < s.n_limbs:
+        w_limbs = jnp.concatenate([
+            w_limbs,
+            jnp.zeros((s.n_limbs - w_limbs.shape[0],) + w_limbs.shape[1:],
+                      jnp.bfloat16)], axis=0)
     w_limbs = w_limbs[: s.n_limbs]
     lead = x.shape[:-1]
     a = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
@@ -148,6 +269,8 @@ def mp_matmul_prelimbed_weights(
     _, K2, N = w_limbs.shape
     assert K == K2
     bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    bm_, bk_, bn_ = _clamp_vmem(mode, bm_, bk_, bn_, out_dtype,
+                                variant="prelimbed_b")
     Mp, Kp, Np = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
     a = _pad2(a, Mp, Kp)
     w_limbs = jnp.pad(w_limbs, [(0, 0), (0, Kp - K), (0, Np - N)])

@@ -18,15 +18,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import limbs as limbs_lib
-from repro.core.limbs import DD
+from repro.core.limbs import DD, PrelimbedWeight
 from repro.core.formats import FormatLike, resolve
 
-Operand = Union[jax.Array, DD]
+Operand = Union[jax.Array, DD, PrelimbedWeight]
 
 
 def _limbs_of(x: Operand, n_limbs: int) -> jax.Array:
     if isinstance(x, DD):
         return limbs_lib.decompose_dd(x, n_limbs)
+    if isinstance(x, PrelimbedWeight):
+        # limbs already extracted (serving path); missing ones are zero —
+        # the value simply carries no bits beyond its stored precision
+        have = x.limbs.shape[0]
+        if have >= n_limbs:
+            return x.limbs[:n_limbs]
+        pad = jnp.zeros((n_limbs - have,) + x.limbs.shape[1:], jnp.bfloat16)
+        return jnp.concatenate([x.limbs, pad], axis=0)
     if x.dtype == jnp.bfloat16:
         # already a single-limb operand; higher limbs are zero
         pad = jnp.zeros((n_limbs - 1,) + x.shape, jnp.bfloat16)
@@ -34,31 +42,10 @@ def _limbs_of(x: Operand, n_limbs: int) -> jax.Array:
     return limbs_lib.decompose(x, n_limbs)
 
 
-def mp_matmul_ref(
-    a: Operand,
-    b: Operand,
-    mode: FormatLike = "M16",
-    *,
-    out_dtype: jnp.dtype = jnp.float32,
-    dim_numbers: Optional[str] = None,
-) -> jax.Array:
-    """Multi-precision matmul oracle.
-
-    a: (..., M, K), b: (..., K, N) with broadcastable leading batch dims
-    (jnp.matmul semantics).  Returns (..., M, N) in ``out_dtype``.
-    """
-    s = resolve(mode)
-
-    if s.n_limbs == 1:
-        # mode M8: plain bf16 matmul with fp32 accumulation — one MXU pass.
-        a1 = (a.hi if isinstance(a, DD) else a).astype(jnp.bfloat16)
-        b1 = (b.hi if isinstance(b, DD) else b).astype(jnp.bfloat16)
-        out = jnp.matmul(a1, b1, preferred_element_type=jnp.float32)
-        return out.astype(out_dtype)
-
-    al = _limbs_of(a, s.n_limbs)  # (L, ..., M, K) bf16
-    bl = _limbs_of(b, s.n_limbs)  # (L, ..., K, N) bf16
-
+def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype) -> jax.Array:
+    """Limb-product contraction from pre-extracted limb stacks (the shared
+    core of :func:`mp_matmul_ref` and :func:`mp_fused_proj_ref` — the fused
+    variant extracts A's limbs ONCE and calls this per B operand)."""
     if s.n_limbs <= 3:
         # separate limb-product matmuls, PLAIN adds between them.  Operands
         # stay unflattened — a (B·S, K) reshape merges sharded batch×seq dims
@@ -88,6 +75,101 @@ def mp_matmul_ref(
 
     out = limbs_lib.neumaier_sum(order_sums)
     return out.astype(out_dtype)
+
+
+def mp_matmul_ref(
+    a: Operand,
+    b: Operand,
+    mode: FormatLike = "M16",
+    *,
+    out_dtype: jnp.dtype = jnp.float32,
+    dim_numbers: Optional[str] = None,
+) -> jax.Array:
+    """Multi-precision matmul oracle.
+
+    a: (..., M, K), b: (..., K, N) with broadcastable leading batch dims
+    (jnp.matmul semantics).  Returns (..., M, N) in ``out_dtype``.
+    """
+    s = resolve(mode)
+
+    if s.n_limbs == 1:
+        # mode M8: plain bf16 matmul with fp32 accumulation — one MXU pass.
+        a1 = _limbs_of(a, 1)[0] if isinstance(a, PrelimbedWeight) \
+            else (a.hi if isinstance(a, DD) else a).astype(jnp.bfloat16)
+        b1 = _limbs_of(b, 1)[0] if isinstance(b, PrelimbedWeight) \
+            else (b.hi if isinstance(b, DD) else b).astype(jnp.bfloat16)
+        out = jnp.matmul(a1, b1, preferred_element_type=jnp.float32)
+        return out.astype(out_dtype)
+
+    al = _limbs_of(a, s.n_limbs)  # (L, ..., M, K) bf16
+    bl = _limbs_of(b, s.n_limbs)  # (L, ..., K, N) bf16
+    return _matmul_limbs(al, bl, s, out_dtype)
+
+
+def apply_epilogue(raws, *, gate: str = "none", biases=None, residual=None,
+                   out_dtype=None):
+    """The epilogue lattice on raw projection outputs: per-branch bias add,
+    gate combine (``silu(raws[0]) * raws[1]``), then residual add.  Returns
+    the combined array, the lone output (n_out == 1 unwraps), or the output
+    tuple.  This is THE non-kernel epilogue: the ref oracle, the sequential
+    fallbacks (dispatch extension backends, pre-limbed/AUTO operands), and
+    the rematerializing AD forward in core/mpmatmul.py all call it, so every
+    realization applies bit-identical epilogue math."""
+    raws = list(raws)
+    if biases is not None:
+        raws = [r if b is None else r + b.astype(r.dtype)
+                for r, b in zip(raws, biases)]
+    if gate == "swiglu":
+        if len(raws) != 2:
+            raise ValueError(f"swiglu gate needs 2 outputs, got {len(raws)}")
+        out = jax.nn.silu(raws[0].astype(jnp.float32)) \
+            * raws[1].astype(jnp.float32)
+    elif gate == "none":
+        out = None
+    else:
+        raise ValueError(f"unknown gate {gate!r}")
+    if residual is not None:
+        if out is None and len(raws) != 1:
+            raise ValueError("residual epilogue needs a single final output")
+        out = (raws[0] if out is None else out) + residual
+    if out is None:
+        outs = tuple(r.astype(out_dtype) for r in raws) if out_dtype \
+            else tuple(raws)
+        return outs[0] if len(outs) == 1 else outs
+    return out.astype(out_dtype) if out_dtype else out
+
+
+def mp_fused_proj_ref(
+    x: Operand,
+    ws,
+    mode: FormatLike,
+    *,
+    gate: str = "none",
+    biases=None,
+    residual=None,
+    out_dtype: jnp.dtype = jnp.float32,
+):
+    """Operand-shared fused projection oracle: ``n_out`` contractions of one
+    activation ``x`` against stacked weights, decomposing x's limbs ONCE.
+
+    x: (..., M, K); ws: sequence of (K, N_t) (or PrelimbedWeight).  Returns a
+    tuple of (..., M, N_t) outputs, or a single array when the epilogue
+    combines them (gate) / n_out == 1.  This is also what the XLA ("ref") and
+    sharded backends run — sharing the one-time A decomposition is the fused
+    win those backends can realize without a Pallas kernel.
+    """
+    s = resolve(mode)
+    al = _limbs_of(x, s.n_limbs)  # ONCE, shared across all n_out products
+    raws = []
+    for w in ws:
+        if s.n_limbs == 1:
+            b1 = _limbs_of(w, 1)[0]
+            raw = jnp.matmul(al[0], b1, preferred_element_type=jnp.float32)
+        else:
+            raw = _matmul_limbs(al, _limbs_of(w, s.n_limbs), s, jnp.float32)
+        raws.append(raw)
+    return apply_epilogue(raws, gate=gate, biases=biases, residual=residual,
+                          out_dtype=out_dtype)
 
 
 def mp_matmul_partials(

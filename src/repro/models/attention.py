@@ -13,7 +13,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.mpmatmul import mp_dense, mp_matmul, mp_qkv_proj
 from repro.core.policy import PrecisionPolicy
 from repro.models.layers import apply_rope, dense_init
 
@@ -181,9 +181,13 @@ def gqa_forward(
     mode_qkv = policy.mode("qkv")
     bwd = policy.bwd_kwargs("qkv")
 
-    q = mp_dense(x, params["wq"], mode_qkv, **bwd).reshape(B, S, h, dh)
-    k = mp_dense(x, params["wk"], mode_qkv, **bwd).reshape(B, S, hk, dh)
-    v = mp_dense(x, params["wv"], mode_qkv, **bwd).reshape(B, S, hk, dh)
+    # one fused projection group: x is read + limb-decomposed once for all
+    # three (GQA widths concat along N in the ops layer — DESIGN.md §4)
+    q, k, v = mp_qkv_proj(x, params["wq"], params["wk"], params["wv"],
+                          mode_qkv, **bwd)
+    q = q.reshape(B, S, h, dh)
+    k = k.reshape(B, S, hk, dh)
+    v = v.reshape(B, S, hk, dh)
 
     if positions is None:
         if cache is not None:

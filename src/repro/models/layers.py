@@ -7,7 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.mpmatmul import mp_dense
+from repro.core.mpmatmul import mp_dense, mp_swiglu
 from repro.core.policy import PrecisionPolicy
 
 
@@ -30,12 +30,14 @@ def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
 def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                w_down: jax.Array, policy: PrecisionPolicy,
                op_class: str = "ffn") -> jax.Array:
-    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) )."""
+    """LLaMA-style gated MLP: down( silu(x@gate) * (x@up) ).
+
+    The gate/up pair runs as ONE fused projection (x read and
+    limb-decomposed once, the silu-gate combine applied in the kernel's
+    flush — DESIGN.md §4), so the g/u intermediates never round-trip HBM."""
     mode = policy.mode(op_class)
     bwd = policy.bwd_kwargs(op_class)
-    g = mp_dense(x, w_gate, mode, **bwd)
-    u = mp_dense(x, w_up, mode, **bwd)
-    h = jax.nn.silu(g) * u
+    h = mp_swiglu(x, w_gate, w_up, mode, **bwd)
     return mp_dense(h, w_down, mode, **bwd)
 
 

@@ -18,7 +18,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mpmatmul import mp_dense, mp_matmul
+from repro.core.mpmatmul import mp_dense, mp_fused_proj
 from repro.core.policy import PrecisionPolicy
 from repro.models.attention import NEG_INF, chunked_attention
 from repro.models.layers import apply_rope, dense_init
@@ -66,16 +66,24 @@ def init_mla_params(key, dims: MLADims, dtype=jnp.float32) -> dict:
     return p
 
 
-def _queries(params, x, dims: MLADims, policy: PrecisionPolicy):
+def _input_projections(params, x, dims: MLADims, policy: PrecisionPolicy):
+    """The three/four projections that consume ``x``, as ONE fused group.
+
+    q (or its LoRA down-projection), the KV latent, and the shared rope key
+    all contract the same activation — mp_fused_proj reads and
+    limb-decomposes x once for the whole group (DESIGN.md §4).  Returns
+    (q_nope, q_rope, c_kv, k_rope) with rope NOT yet applied.
+    """
     B, S, _ = x.shape
     mode, bwd = policy.mode("qkv"), policy.bwd_kwargs("qkv")
+    wq = params["w_dq"] if dims.q_lora > 0 else params["w_q"]
+    q, c_kv, k_rope = mp_fused_proj(
+        x, (wq, params["w_dkv"], params["w_kr"]), mode, **bwd)
     if dims.q_lora > 0:
-        cq = mp_dense(x, params["w_dq"], mode, **bwd)
-        q = mp_dense(cq, params["w_uq"], mode, **bwd)
-    else:
-        q = mp_dense(x, params["w_q"], mode, **bwd)
+        q = mp_dense(q, params["w_uq"], mode, **bwd)
     q = q.reshape(B, S, dims.n_heads, dims.qk_head_dim)
-    return q[..., : dims.qk_nope_dim], q[..., dims.qk_nope_dim:]
+    return (q[..., : dims.qk_nope_dim], q[..., dims.qk_nope_dim:],
+            c_kv, k_rope)
 
 
 def mla_forward(
@@ -97,11 +105,8 @@ def mla_forward(
         base = cache.length if cache is not None else 0
         positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
 
-    q_nope, q_rope = _queries(params, x, dims, policy)
+    q_nope, q_rope, c_kv, k_rope = _input_projections(params, x, dims, policy)
     q_rope = apply_rope(q_rope, positions, dims.rope_theta)
-
-    c_kv = mp_dense(x, params["w_dkv"], mode, **bwd)      # (B,S,lora)
-    k_rope = mp_dense(x, params["w_kr"], mode, **bwd)     # (B,S,rope)
     k_rope = apply_rope(k_rope[:, :, None, :], positions,
                         dims.rope_theta)[:, :, 0, :]
 
@@ -120,11 +125,12 @@ def mla_forward(
                            **policy.bwd_kwargs("attn_out"))
             return out, new_cache
 
-    # train / prefill: up-project latent to per-head K, V (unabsorbed)
-    k_nope = mp_dense(c_kv, params["w_uk"], mode, **bwd
-                      ).reshape(B, S, h, dims.qk_nope_dim)
-    v = mp_dense(c_kv, params["w_uv"], mode, **bwd
-                 ).reshape(B, S, h, dims.v_head_dim)
+    # train / prefill: up-project latent to per-head K, V (unabsorbed) —
+    # both contract c_kv, so they share one fused A decomposition too
+    k_nope, v = mp_fused_proj(c_kv, (params["w_uk"], params["w_uv"]),
+                              mode, **bwd)
+    k_nope = k_nope.reshape(B, S, h, dims.qk_nope_dim)
+    v = v.reshape(B, S, h, dims.v_head_dim)
     k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
                                 (B, S, h, dims.qk_rope_dim))
     q = jnp.concatenate([q_nope, q_rope], axis=-1)

@@ -51,11 +51,15 @@ from repro.core.context import (  # noqa: F401
     reset_context,
 )
 from repro.core.policy import OpRule, PrecisionPolicy, get_policy  # noqa: F401
+from repro.core.limbs import PrelimbedWeight, prelimb_weight  # noqa: F401
 from repro.core.mpmatmul import (  # noqa: F401
     mode_flops,
     mp_dense,
     mp_einsum_qk,
+    mp_fused_proj,
     mp_matmul,
+    mp_qkv_proj,
+    mp_swiglu,
 )
 from repro.core.auto import auto_report, mp_matmul_auto, select_mode_index  # noqa: F401
 from repro.core.dispatch import (  # noqa: F401

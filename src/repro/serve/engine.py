@@ -13,6 +13,19 @@ of ``PrecisionPolicy.to_json``, which embeds any custom format definitions)
 and swaps the precision of all subsequent prefill/decode steps.  Step
 functions are cached per policy, so flipping between a small set of policies
 re-traces once per policy, then swaps are free.
+
+Weight pre-limbing: decode is matmul-bound at tiny M (one token per slot),
+so the per-step VPU limb cascade over every *weight* dominates the paper's
+"truncate before multiply" cost.  The engine decomposes the dense-path
+weights ONCE per (policy, params) — via the Pallas decompose kernel
+(``kernels/ops.decompose_weights`` wrapping ``build_decompose_call``) at the
+policy's maximum limb count — and runs decode steps against
+:class:`~repro.core.limbs.PrelimbedWeight` operands, which dispatch routes
+through ``mp_matmul_prelimbed_weights`` (the kernel's ``prelimbed_b``
+variant): B-limb extraction leaves the decode loop entirely.  Prefill keeps
+the raw weights (it wants the fused multi-output projection kernel, which
+re-extracts limbs it shares across a whole group).  AUTO policies skip
+pre-limbing — the controller analyzes raw operand values.
 """
 from __future__ import annotations
 
@@ -25,9 +38,76 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import context as context_lib
+from repro.core.formats import is_auto
+from repro.core.limbs import PrelimbedWeight
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
 from repro.train.trainer import make_prefill_step, make_serve_step
+
+# op classes whose weights sit on the decode dense path (the pre-limb set);
+# MoE experts/MLA stay raw: their weights reshape/absorb before contracting
+_PRELIMB_CLASSES = ("qkv", "attn_out", "ffn", "lm_head")
+
+# params-tree groups -> weight leaves that feed mp_dense 1:1 (safe to carry
+# as limb stacks; anything that is reshaped, LoRA-patched, or einsum'd —
+# MLA, MoE, SSM, the hybrid shared block — is deliberately absent)
+_PRELIMB_LEAVES = {"mlp": ("w_gate", "w_up", "w_down"),
+                   "attn": ("wq", "wk", "wv", "wo")}
+
+
+def _policy_prelimb_limbs(policy: PrecisionPolicy) -> Optional[int]:
+    """Max limb count any decode-path forward format needs, or None when an
+    AUTO rule makes pre-limbing unusable (AUTO analyzes raw values)."""
+    n = 1
+    for c in _PRELIMB_CLASSES:
+        mode = policy.mode(c)
+        if is_auto(mode):
+            return None
+        n = max(n, mode.n_limbs)
+    return n
+
+
+def prelimb_dense_params(params, n_limbs: int, *, interpret: bool):
+    """Decompose the dense-path weight matrices of a transformer params tree
+    into :class:`PrelimbedWeight` limb stacks (one-time, per policy).
+
+    Stacked per-layer weights (L, K, N) flatten their row dims through the
+    2-D Pallas decompose kernel (elementwise, so exact) and come back as
+    (L, n_limbs, K, N) — ``lax.scan`` then slices a layer's stack naturally.
+    Non-dict / absent groups pass through untouched.
+    """
+    from repro.kernels import ops  # deferred: imports pallas
+
+    def leaf(w):
+        if w.ndim == 2:
+            return PrelimbedWeight(
+                ops.decompose_weights(w, n_limbs, interpret=interpret))
+        if w.ndim == 3:  # stacked per-layer (L, K, N)
+            L, K, N = w.shape
+            limbs = ops.decompose_weights(
+                w.reshape(L * K, N), n_limbs, interpret=interpret)
+            return PrelimbedWeight(
+                limbs.reshape(n_limbs, L, K, N).transpose(1, 0, 2, 3))
+        return w
+
+    out = dict(params)
+    for stack_key in ("layers", "dense_layers"):
+        blocks = out.get(stack_key)
+        if not isinstance(blocks, dict):
+            continue
+        blocks = dict(blocks)
+        for group, keys in _PRELIMB_LEAVES.items():
+            if isinstance(blocks.get(group), dict):
+                sub = dict(blocks[group])
+                for k in keys:
+                    if k in sub:
+                        sub[k] = leaf(sub[k])
+                blocks[group] = sub
+        out[stack_key] = blocks
+    for head in ("lm_head", "ctc_head"):
+        if isinstance(out.get(head), dict) and "w" in out[head]:
+            out[head] = {**out[head], "w": leaf(out[head]["w"])}
+    return out
 
 
 @dataclasses.dataclass
@@ -43,7 +123,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512,
                  policy: Optional[PrecisionPolicy] = None, mesh=None,
-                 greedy: bool = True, matmul_backend: Optional[str] = None):
+                 greedy: bool = True, matmul_backend: Optional[str] = None,
+                 prelimb_weights: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -55,13 +136,27 @@ class ServeEngine:
         # CPU CI, the autotuned Pallas kernel on a TPU slice, or the sharded
         # path on a multi-device host without touching the model code
         self.matmul_backend = matmul_backend
+        self.prelimb_weights = prelimb_weights
         self._step_cache: Dict[PrecisionPolicy, Tuple] = {}
+        # (n_limbs, id(params)) -> prelimbed tree: the id guards against a
+        # live params swap (eng.params = reloaded) silently leaving decode on
+        # stale limb stacks while prefill uses the new weights
+        self._prelimb_cache: Dict[Tuple[int, int], dict] = {}
         self.policy = (policy
                        or context_lib.current_context().policy
                        or PrecisionPolicy.serve_default())
         self._prefill, self._decode = self._steps_for(self.policy)
-        self.cache = T.make_cache(cfg, max_batch, max_seq, dtype=jnp.float32)
+        self._decode_params_for(self.policy)  # eager decompose (cold-start)
+        # NOTE: no engine-owned KV pool here — generate() and the throughput
+        # probe each build their own cache (a resident pool would only double
+        # cache memory; the v2 engine allocated one and never used it)
         self._slots: List[Optional[Request]] = [None] * max_batch
+
+    @property
+    def _decode_params(self):
+        """Decode-step params, resolved lazily so a live ``eng.params`` swap
+        (checkpoint reload) can never leave decode on stale limb stacks."""
+        return self._decode_params_for(self.policy)
 
     # distinct policies whose jit'd steps stay resident; per-request swapping
     # across more than this re-traces in LRU fashion instead of leaking
@@ -102,7 +197,28 @@ class ServeEngine:
             policy = PrecisionPolicy.from_json(policy)
         self.policy = policy
         self._prefill, self._decode = self._steps_for(policy)
+        self._decode_params_for(policy)  # warm the prelimb cache eagerly
         return policy
+
+    def _decode_params_for(self, policy: PrecisionPolicy):
+        """Decode-step params: dense-path weights as pre-extracted limb
+        stacks, decomposed ONCE per (policy limb count, params) and cached.
+        Falls back to the raw params under AUTO policies or when pre-limbing
+        is disabled."""
+        if not self.prelimb_weights:
+            return self.params
+        n = _policy_prelimb_limbs(policy)
+        if n is None:
+            return self.params
+        key = (n, id(self.params))
+        if key not in self._prelimb_cache:
+            stale = [k for k in self._prelimb_cache if k[1] != id(self.params)]
+            for k in stale:
+                del self._prelimb_cache[k]
+            interpret = jax.default_backend() == "cpu"
+            self._prelimb_cache[key] = prelimb_dense_params(
+                self.params, n, interpret=interpret)
+        return self._prelimb_cache[key]
 
     # -- single-request path (prefill writes the whole pool cache; simple and
     #    jit-stable: one prefill per unique prompt length bucket) -----------
@@ -125,7 +241,7 @@ class ServeEngine:
         for _ in range(max_new):
             for i in range(B):
                 outs[i].append(int(cur[i, 0]))
-            logits, cache = self._decode(self.params, cache, cur)
+            logits, cache = self._decode(self._decode_params, cache, cur)
             cur = jnp.argmax(logits[:, -1, :], axis=-1
                              ).astype(jnp.int32)[:, None]
         return [outs[i] for i in range(B)]
@@ -136,11 +252,11 @@ class ServeEngine:
         cache = T.make_cache(self.cfg, self.max_batch, self.max_seq,
                              dtype=jnp.float32)
         tok = jnp.zeros((self.max_batch, 1), jnp.int32)
-        logits, cache = self._decode(self.params, cache, tok)  # compile
+        logits, cache = self._decode(self._decode_params, cache, tok)  # compile
         jax.block_until_ready(logits)
         t0 = time.perf_counter()
         for _ in range(steps):
-            logits, cache = self._decode(self.params, cache, tok)
+            logits, cache = self._decode(self._decode_params, cache, tok)
         jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         return {"tokens_per_s": self.max_batch * steps / dt,
