@@ -40,6 +40,23 @@ def main():
     outs = eng.generate(prompts[:2], max_new=4)
     print(f"after set_policy(full_fp32 JSON): {outs}")
 
+    # continuous batching with per-request QoS: requests carry their own
+    # precision mode, join the decode batch on arrival, evict on EOS, and
+    # recycle paged KV blocks — the paper's mode table per request
+    from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
+
+    sched = ContinuousScheduler(eng, n_blocks=32, block_size=8)
+    done = sched.run([
+        ScheduledRequest(rid=0, prompt=prompts[0], max_new=6, mode="M8"),
+        ScheduledRequest(rid=1, prompt=prompts[1], max_new=6, mode="M23"),
+        ScheduledRequest(rid=2, prompt=prompts[2], max_new=4, arrival=2),
+    ])
+    print("continuous scheduler (per-request modes):")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req{r.rid} [{r.mode or 'engine-default'}] "
+              f"admit@{r.admitted_step} done@{r.done_step}: {r.out}")
+    print(f"  {sched.stats()}")
+
 
 if __name__ == "__main__":
     main()

@@ -181,6 +181,29 @@ def context(**kw):
         _scoped.reset(token)
 
 
+def resolve_request_policy(mode=None, policy=None,
+                           base: Optional[PrecisionPolicy] = None
+                           ) -> PrecisionPolicy:
+    """Per-request precision resolution — the serving QoS overlay.
+
+    A request may carry a full ``policy`` (object or JSON wire form; wins
+    outright) or a single ``mode`` (any :func:`repro.core.formats.resolve`
+    spelling; applied as a whole-network overlay on ``base`` via
+    :meth:`PrecisionPolicy.overlay` — the paper's 3-bit mode register scoped
+    to one request).  ``base`` defaults to the active context's policy, else
+    the serving recipe default.
+    """
+    if policy is not None:
+        if not isinstance(policy, PrecisionPolicy):
+            policy = PrecisionPolicy.from_json(policy)
+        return policy
+    if base is None:
+        base = current_context().policy or PrecisionPolicy.serve_default()
+    if mode is None:
+        return base
+    return base.overlay(mode)
+
+
 def autotune_enabled() -> bool:
     """The effective autotune switch for dispatch: an explicitly configured
     context flag wins; otherwise the deprecated REPRO_MP_AUTOTUNE env var is

@@ -1,4 +1,4 @@
-"""Block-size autotuner for the fused Pallas mp_matmul kernel (DESIGN.md §6).
+"""Block-size autotuner for the fused Pallas mp_matmul kernel (DESIGN.md §7).
 
 The kernel's (bm, bn, bk) tile sizes trade MXU utilization against VMEM
 pressure, and the right point moves with the precision mode: high modes carry

@@ -1,7 +1,15 @@
 """Serving launcher: batched generation with the precision dial.
 
+Static path (one batch, one policy):
+
     PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
         --smoke --policy serve_default --requests 4 --max-new 16
+
+Continuous-batching path (paged KV pool, Poisson request stream, per-request
+precision modes — the paper's mode table as per-request QoS):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
+        --smoke --scheduler --requests 12 --mixed-modes
 """
 import argparse
 
@@ -25,6 +33,21 @@ def main():
     ap.add_argument("--backend", default="",
                     help="mp_matmul dispatch backend (ref/pallas/"
                          "pallas_interpret/sharded); '' = context default")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="continuous-batching scheduler (paged KV pool, "
+                         "join-on-arrival/evict-on-EOS) instead of the "
+                         "static generate() batch")
+    ap.add_argument("--mixed-modes", action="store_true",
+                    help="scheduler only: give requests rotating per-request "
+                         "precision modes (M8/M16/M23)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="scheduler only: Poisson mean arrivals per decode "
+                         "step for the simulated request stream")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="scheduler only: paged pool size in blocks "
+                         "(0 = sized from --requests)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="scheduler only: tokens per KV block")
     args = ap.parse_args()
 
     if args.backend:
@@ -39,9 +62,14 @@ def main():
             and jax.default_backend() == "cpu":
         raise SystemExit("full config on CPU: use --smoke")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    if args.scheduler:
+        _run_scheduler(cfg, params, args, rng)
+        return
+
     eng = ServeEngine(cfg, params, max_batch=args.requests,
                       max_seq=args.max_seq, policy=get_policy(args.policy))
-    rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=rng.integers(2, 9)
                             ).astype(np.int32)
                for _ in range(args.requests)]
@@ -49,6 +77,40 @@ def main():
     for i, o in enumerate(outs):
         print(f"req{i} ({len(prompts[i])} prompt toks): {o}")
     print(eng.decode_throughput_probe())
+
+
+def _run_scheduler(cfg, params, args, rng):
+    """Request-stream driver: Poisson arrivals through the continuous
+    scheduler, each request optionally carrying its own precision mode."""
+    from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
+
+    slots = min(args.requests, 8)
+    eng = ServeEngine(cfg, params, max_batch=slots, max_seq=args.max_seq,
+                      policy=get_policy(args.policy))
+    block_size = args.kv_block_size
+    n_blocks = args.kv_blocks or (
+        1 + slots * 2 * max(1, -(-(args.max_seq) // block_size)))
+    sched = ContinuousScheduler(eng, n_blocks=n_blocks,
+                                block_size=block_size)
+    modes = ("M8", "M16", "M23") if args.mixed_modes else (None,)
+    t = 0
+    reqs = []
+    for i in range(args.requests):
+        t += int(rng.poisson(1.0 / max(args.arrival_rate, 1e-6)))
+        reqs.append(ScheduledRequest(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab,
+                                size=int(rng.integers(2, 17))
+                                ).astype(np.int32),
+            max_new=int(rng.integers(2, args.max_new + 1)),
+            mode=modes[i % len(modes)],
+            arrival=t))
+    done = sched.run(reqs)
+    for r in sorted(done, key=lambda r: r.rid):
+        qos = r.mode or "engine-default"
+        print(f"req{r.rid} [{qos}] arrive@{r.arrival} "
+              f"admit@{r.admitted_step} done@{r.done_step}: {r.out}")
+    print(sched.stats())
 
 
 if __name__ == "__main__":

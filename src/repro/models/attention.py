@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.mpmatmul import mp_dense, mp_matmul, mp_qkv_proj
 from repro.core.policy import PrecisionPolicy
 from repro.models.layers import apply_rope, dense_init
+from repro.serve.kv_cache import PagedKVCache
 
 NEG_INF = -1e30
 
@@ -75,8 +76,22 @@ def chunked_attention(
 
     B, S, H, Dh = q.shape
     T = k.shape[1]
+    # chunk-count selection with ragged support: the historical divisible
+    # shapes keep their exact chunking (bit-stable numerics); ragged lengths
+    # cap the chunk at q_chunk/kv_chunk and pad-and-mask the tail chunk, so
+    # the serving scheduler can admit arbitrary-length prompts
     nq = max(1, S // q_chunk)
     nk = max(1, T // kv_chunk)
+    if S % nq:
+        qc = max(1, min(q_chunk, S))
+        nq = -(-S // qc)
+    else:
+        qc = S // nq
+    if T % nk:
+        kc = max(1, min(kv_chunk, T))
+        nk = -(-T // kc)
+    else:
+        kc = T // nk
 
     # parallelization strategy over the model axis:
     #   heads divisible  -> Ulysses (seq<->heads all-to-all), serial q-chunks
@@ -94,29 +109,36 @@ def chunked_attention(
             and S % m_size == 0):
         # adaptive chunking: make the q-chunk count a multiple of the model
         # axis so the chunk dim can shard (e.g. S=4096, m=16: nq 4 -> 16)
-        nq = m_size * max(1, nq // m_size)
+        cand = m_size * max(1, nq // m_size)
+        if S % cand == 0:
+            nq, qc = cand, S // cand
     seq_mode = (want_model_parallel and not heads_mode and nq % m_size == 0
-                and S % nq == 0)
+                and S == nq * qc)
 
     if heads_mode:
         q = _sh.constrain(q, "attn_heads")
         k = _sh.constrain(k, "attn_heads")
         v = _sh.constrain(v, "attn_heads")
     scale = 1.0 / jnp.sqrt(Dh)
-    assert S % nq == 0 and T % nk == 0, (S, T, q_chunk, kv_chunk)
-    qc, kc = S // nq, T // nk
+
+    S_pad, T_pad = nq * qc, nk * kc
+    if S_pad != S:
+        q = jnp.pad(q, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    if T_pad != T:
+        k = jnp.pad(k, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
 
     mode_l = policy.mode("attn_logits")
     mode_o = policy.mode("attn_out")
     bwd = policy.bwd_kwargs("attn_logits")
 
-    # (B, S, H, Dh) -> (nq, B, H, qc, Dh)
+    # (B, S_pad, H, Dh) -> (nq, B, H, qc, Dh)
     qr = q.reshape(B, nq, qc, H, Dh).transpose(1, 0, 3, 2, 4) * scale
     kr = k.reshape(B, nk, kc, H, Dh).transpose(1, 0, 3, 2, 4)
     vr = v.reshape(B, nk, kc, H, Dh).transpose(1, 0, 3, 2, 4)
 
-    q_pos = q_offset + jnp.arange(S).reshape(nq, qc)
-    k_pos = jnp.arange(T).reshape(nk, kc)
+    q_pos = q_offset + jnp.arange(S_pad).reshape(nq, qc)
+    k_pos = jnp.arange(T_pad).reshape(nk, kc)
 
     def per_q_chunk(qi, q_blk):
         def per_kv_chunk(carry, inp):
@@ -127,7 +149,11 @@ def chunked_attention(
             )  # (B, H, qc, kc)
             if causal:
                 mask = q_pos[qi][:, None] >= k_pos[ki][None, :]
+                if T_pad != T:  # padded tail keys are not real positions
+                    mask = mask & (k_pos[ki][None, :] < T)
                 logits = jnp.where(mask, logits, NEG_INF)
+            elif T_pad != T:
+                logits = jnp.where(k_pos[ki][None, :] < T, logits, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
             p = jnp.exp(logits - m_new[..., None])
             alpha = jnp.exp(m_run - m_new)
@@ -159,8 +185,9 @@ def chunked_attention(
     else:
         out = jax.lax.map(lambda args: per_q_chunk(*args),
                           (jnp.arange(nq), qr))
-    # (nq, B, H, qc, Dh) -> (B, S, H, Dh)
-    return out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dh)
+    # (nq, B, H, qc, Dh) -> (B, S_pad, H, Dh); drop padded query rows
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, S_pad, H, Dh)
+    return out[:, :S] if S_pad != S else out
 
 
 def gqa_forward(
@@ -191,7 +218,9 @@ def gqa_forward(
 
     if positions is None:
         if cache is not None:
-            positions = cache.length + jnp.arange(S)[None, :]
+            base = cache.length  # scalar, or (B,) for paged per-slot lengths
+            base = base[:, None] if getattr(base, "ndim", 0) else base
+            positions = base + jnp.arange(S)[None, :]
         else:
             positions = jnp.arange(S)[None, :]
         positions = jnp.broadcast_to(positions, (B, S))
@@ -201,7 +230,19 @@ def gqa_forward(
         k = apply_rope(k, positions, dims.rope_theta, dims.rope_fraction)
 
     new_cache = None
-    if cache is not None:
+    if isinstance(cache, PagedKVCache):
+        new_cache = _paged_write(cache, k, v, positions)
+        if S == 1:
+            out = _paged_decode_attention(q, new_cache, dims, policy)
+        else:
+            # paged prefill is always into a fresh slot (scheduler invariant:
+            # per-slot length == 0), so attention is plain self-attention
+            # over the just-computed K/V — nothing to gather from the pool
+            kk = _repeat_kv(k, h // hk)
+            vv = _repeat_kv(v, h // hk)
+            out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+    elif cache is not None:
         kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
                                                  cache.length, axis=1)
         vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
@@ -255,11 +296,62 @@ def _decode_attention(q, k_cache, v_cache, length, dims: AttnDims,
     kk = _repeat_kv(k_cache.astype(jnp.float32), n_rep)  # (B, T, H, Dh)
     vv = _repeat_kv(v_cache.astype(jnp.float32), n_rep)
     logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kk) * scale
-    mask = (jnp.arange(T)[None, None, None, :] < length)
+    # length: scalar (dense cache) or (B,) per-slot (paged micro-batch)
+    ln = length.reshape(-1, 1, 1, 1) if getattr(length, "ndim", 0) else length
+    mask = (jnp.arange(T)[None, None, None, :] < ln)
     logits = jnp.where(mask, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhst,bthd->bshd", p, vv)
     return out.astype(q.dtype)
+
+
+def _paged_write(cache: PagedKVCache, k: jax.Array, v: jax.Array,
+                 positions: jax.Array) -> PagedKVCache:
+    """Scatter S new K/V tokens per slot into the paged block pool.
+
+    ``positions`` (B, S) are the absolute token positions being written; each
+    maps to physical location ``(block_table[pos // bs], pos % bs)``.
+    Positions past a slot's reserved blocks land in the trash block (table
+    rows are trash-padded; positions past the table itself are redirected to
+    trash explicitly — clamping them into the last column could corrupt a
+    full row's final real block) or in the row's own reserved tail, which is
+    rewritten before any read (serve/kv_cache.py invariants) — so the write
+    needs no predication.
+    """
+    from repro.serve.kv_cache import TRASH_BLOCK
+
+    B, S = positions.shape
+    bs = cache.block_size
+    max_blocks = cache.block_table.shape[1]
+    col = positions // bs
+    blk = jnp.take_along_axis(cache.block_table,
+                              jnp.clip(col, 0, max_blocks - 1), axis=1)
+    blk = jnp.where(col < max_blocks, blk, TRASH_BLOCK)         # (B, S)
+    off = positions % bs
+    hk, dh = k.shape[2], k.shape[3]
+    kf = k.astype(cache.k.dtype).reshape(B * S, hk, dh)
+    vf = v.astype(cache.v.dtype).reshape(B * S, hk, dh)
+    kp = cache.k.at[blk.reshape(-1), off.reshape(-1)].set(kf)
+    vp = cache.v.at[blk.reshape(-1), off.reshape(-1)].set(vf)
+    return PagedKVCache(kp, vp, cache.block_table, cache.length + S)
+
+
+def _paged_decode_attention(q: jax.Array, cache: PagedKVCache,
+                            dims: AttnDims, policy: PrecisionPolicy
+                            ) -> jax.Array:
+    """One-token attention against the paged pool: gather each slot's blocks
+    into a contiguous (B, max_blocks·bs) view, then run the standard masked
+    decode attention with the per-slot lengths.  Trash-table entries gather
+    garbage that sits past every slot's length and is masked off."""
+    B = q.shape[0]
+    bs = cache.block_size
+    max_blocks = cache.block_table.shape[1]
+    kk = cache.k[cache.block_table]          # (B, max_blocks, bs, Hkv, Dh)
+    vv = cache.v[cache.block_table]
+    hk, dh = kk.shape[-2], kk.shape[-1]
+    kk = kk.reshape(B, max_blocks * bs, hk, dh)
+    vv = vv.reshape(B, max_blocks * bs, hk, dh)
+    return _decode_attention(q, kk, vv, cache.length, dims, policy)
 
 
 def make_kv_cache(batch: int, max_seq: int, dims: AttnDims,

@@ -365,7 +365,8 @@ def forward(
     B, S, _ = h.shape
 
     if cache is not None:
-        base = _cache_length(cache, cfg)
+        base = _cache_length(cache, cfg)  # scalar, or (B,) for paged caches
+        base = base[:, None] if base.ndim else base
         positions = jnp.broadcast_to(base + jnp.arange(S)[None, :], (B, S))
     else:
         positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
@@ -484,8 +485,14 @@ def _hybrid_forward(params, h, cfg, policy, positions, cache):
 
 
 def _cache_length(cache: ModelCache, cfg: ModelConfig):
+    from repro.serve.kv_cache import PagedKVCache
+
     for c in (cache.attn, cache.ssm, cache.shared_attn):
         if c is not None:
             ln = c.length
+            if isinstance(c, PagedKVCache):
+                # stacked (L, B) per-slot lengths -> (B,): every layer
+                # carries the same host state, keep the per-slot vector
+                return ln[0] if ln.ndim > 1 else ln
             return ln[tuple(0 for _ in range(ln.ndim))] if ln.ndim else ln
     raise ValueError("empty cache")

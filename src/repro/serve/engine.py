@@ -42,6 +42,7 @@ from repro.core.formats import is_auto
 from repro.core.limbs import PrelimbedWeight
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
+from repro.serve.kv_cache import PagedKVCache
 from repro.train.trainer import make_prefill_step, make_serve_step
 
 # op classes whose weights sit on the decode dense path (the pre-limb set);
@@ -119,6 +120,55 @@ class Request:
     done: bool = False
 
 
+def make_paged_prefill_step(cfg: ModelConfig, policy: PrecisionPolicy,
+                            mesh=None):
+    """Prefill one (micro-batch of) fresh request(s) into the paged pool.
+
+    ``table`` (B, max_blocks) / ``lengths`` (B,) are the host scheduler's
+    slot state (lengths are 0: paged prefill targets fresh slots only);
+    ``last_idx`` is the true prompt length minus one — prompts are padded to
+    a shape bucket, the padded tail writes land past the reservation (trash
+    or rewritten-before-read positions, serve/kv_cache.py) and the returned
+    logits row is the real last token's.
+    """
+    L = cfg.n_layers
+
+    def step(params, pool_k, pool_v, table, lengths, tokens, last_idx):
+        cache = T.ModelCache(attn=PagedKVCache(
+            k=pool_k, v=pool_v,
+            block_table=jnp.broadcast_to(table, (L,) + table.shape),
+            length=jnp.broadcast_to(lengths, (L,) + lengths.shape)))
+        logits, _, new_cache = T.forward(params, {"tokens": tokens}, cfg,
+                                         policy, cache=cache, mesh=mesh)
+        last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
+        return last, new_cache.attn.k, new_cache.attn.v
+
+    return step
+
+
+def make_paged_decode_step(cfg: ModelConfig, policy: PrecisionPolicy,
+                           mesh=None):
+    """One decode step over a compacted micro-batch of active slots.
+
+    The active-slot mask is carried by the (table, lengths) pair itself:
+    padded/inactive rows are (all-trash row, length 0), so their reads mask
+    to nothing and their writes land in the trash block — no in-kernel
+    branching.  Returns (logits (B, 1, V), new pool k, new pool v).
+    """
+    L = cfg.n_layers
+
+    def step(params, pool_k, pool_v, table, lengths, tokens):
+        cache = T.ModelCache(attn=PagedKVCache(
+            k=pool_k, v=pool_v,
+            block_table=jnp.broadcast_to(table, (L,) + table.shape),
+            length=jnp.broadcast_to(lengths, (L,) + lengths.shape)))
+        logits, _, new_cache = T.forward(params, {"tokens": tokens}, cfg,
+                                         policy, cache=cache, mesh=mesh)
+        return logits, new_cache.attn.k, new_cache.attn.v
+
+    return step
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512,
@@ -138,6 +188,7 @@ class ServeEngine:
         self.matmul_backend = matmul_backend
         self.prelimb_weights = prelimb_weights
         self._step_cache: Dict[PrecisionPolicy, Tuple] = {}
+        self._paged_step_cache: Dict[PrecisionPolicy, Tuple] = {}
         # (n_limbs, id(params)) -> prelimbed tree: the id guards against a
         # live params swap (eng.params = reloaded) silently leaving decode on
         # stale limb stacks while prefill uses the new weights
@@ -163,25 +214,45 @@ class ServeEngine:
     # compiled executables without bound
     MAX_POLICY_CACHE = 8
 
-    def _steps_for(self, policy: PrecisionPolicy) -> Tuple:
-        """jit'd (prefill, decode) pair for one policy (LRU-cached: swapping
-        among a working set of policies re-traces once each, then is free)."""
-        if policy in self._step_cache:
-            self._step_cache[policy] = self._step_cache.pop(policy)  # LRU touch
+    def _cached_steps(self, cache: Dict, policy: PrecisionPolicy,
+                      factories: Tuple) -> Tuple:
+        """Shared LRU discipline for every per-policy jit'd step cache:
+        touch on hit, evict oldest past MAX_POLICY_CACHE, trace (with the
+        engine's backend pinned) on miss."""
+        if policy in cache:
+            cache[policy] = cache.pop(policy)  # LRU touch
         else:
             from repro.core.dispatch import pin_backend
 
-            while len(self._step_cache) >= self.MAX_POLICY_CACHE:
-                self._step_cache.pop(next(iter(self._step_cache)))
-            self._step_cache[policy] = (
-                jax.jit(pin_backend(
-                    make_prefill_step(self.cfg, policy, self.mesh),
-                    self.matmul_backend)),
-                jax.jit(pin_backend(
-                    make_serve_step(self.cfg, policy, self.mesh),
-                    self.matmul_backend)),
-            )
-        return self._step_cache[policy]
+            while len(cache) >= self.MAX_POLICY_CACHE:
+                cache.pop(next(iter(cache)))
+            cache[policy] = tuple(
+                jax.jit(pin_backend(make(self.cfg, policy, self.mesh),
+                                    self.matmul_backend))
+                for make in factories)
+        return cache[policy]
+
+    def _steps_for(self, policy: PrecisionPolicy) -> Tuple:
+        """jit'd (prefill, decode) pair for one policy (LRU-cached: swapping
+        among a working set of policies re-traces once each, then is free)."""
+        return self._cached_steps(self._step_cache, policy,
+                                  (make_prefill_step, make_serve_step))
+
+    def paged_steps_for(self, policy: PrecisionPolicy) -> Tuple:
+        """jit'd (paged_prefill, paged_decode) pair for one policy.
+
+        The continuous scheduler resolves a policy *per request* and buckets
+        compatible requests per decode micro-batch; this cache is what makes
+        a working set of per-request modes free after the first trace (same
+        LRU discipline as :meth:`_steps_for`).  Paged serving assumes the
+        dense GQA cache layout."""
+        if self.cfg.family not in ("dense",) or self.cfg.mla is not None:
+            raise NotImplementedError(
+                f"paged serving supports dense GQA models only "
+                f"(family={self.cfg.family!r}, mla={self.cfg.mla is not None})")
+        return self._cached_steps(
+            self._paged_step_cache, policy,
+            (make_paged_prefill_step, make_paged_decode_step))
 
     def set_policy(self, policy: Union[PrecisionPolicy, str, bytes, dict]
                    ) -> PrecisionPolicy:

@@ -1,0 +1,153 @@
+"""Block-paged KV cache pool — serving memory as a shared free list.
+
+The static serving path allocates one dense ``(B, S_max)`` KV region per
+``generate()`` call and throws it away; a continuous-batching scheduler
+admits and evicts requests *mid-stream*, so cache memory must be recycled at
+a granularity finer than "the whole pool".  This module provides that
+granularity: a fixed device-resident pool of fixed-size **blocks**
+(``block_size`` token positions each, per layer), a host-side **free list**
+that hands blocks to requests and reclaims them on eviction, and per-request
+**block tables** mapping logical token positions to physical blocks — the
+vLLM paged-attention memory model, sized for this repo's CPU/TPU test scale.
+
+Layout (one pool array per K and V):
+
+    k, v: (n_layers, n_blocks, block_size, n_kv_heads, head_dim)
+
+Logical position ``p`` of a request lives at ``pool[layer, table[p // bs],
+p % bs]`` where ``table`` is the request's block-table row.  Block 0 is the
+reserved **trash block**: table rows point their unallocated tail (and
+whole rows of inactive micro-batch slots) at it, so predicated writes need
+no branching — garbage writes land in trash, never in another request's
+blocks.  Two invariants make the scheme safe without any in-kernel masking:
+
+  * reads are masked by per-slot ``length`` (positions >= length are never
+    read), and
+  * every position in ``[prompt_len, length)`` is rewritten by the decode
+    step that produced it before any read — so prefill padding garbage in a
+    request's own reserved tail is always overwritten before it is visible.
+
+:class:`PagedKVCache` is the *jit-side* view (a pytree: pool arrays + block
+table + per-slot lengths) threaded through the model's layer scan exactly
+like the dense :class:`~repro.models.attention.KVCache`.  This module has no
+model dependencies so ``models/attention.py`` can import it freely.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# physical block 0 is never allocated: it is the write target for everything
+# that must go nowhere (inactive slots, padded prefill tails past a request's
+# reservation)
+TRASH_BLOCK = 0
+
+
+class PagedKVCache(NamedTuple):
+    """Jit-side paged cache view (per layer after the scan slices it).
+
+    Stacked form carries a leading ``n_layers`` dim on every field
+    (``block_table``/``length`` are per-layer copies of the same host state
+    so they ride the layer scan like any stacked cache leaf).
+    """
+
+    k: jax.Array            # (n_blocks, block_size, Hkv, Dh)
+    v: jax.Array            # (n_blocks, block_size, Hkv, Dh)
+    block_table: jax.Array  # (B, max_blocks) int32 physical block ids
+    length: jax.Array       # (B,) int32 valid prefix length per slot
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[-3]
+
+
+class BlockPoolExhausted(RuntimeError):
+    """Raised when an allocation asks for more blocks than the free list has."""
+
+
+class PagedKVPool:
+    """Device block pool + host free-list allocator.
+
+    The device arrays are functional (each jit step returns updated pools via
+    :meth:`update`); the free list is plain host state mutated by the
+    scheduler thread.  Allocation never hands out a block twice: a block is
+    either in ``_free``, in ``_live`` (owned by exactly one request), or the
+    trash block.
+    """
+
+    def __init__(self, n_layers: int, n_blocks: int, block_size: int,
+                 n_kv_heads: int, head_dim: int, *,
+                 max_blocks_per_seq: int, dtype=jnp.float32):
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is reserved trash)")
+        if block_size < 1 or max_blocks_per_seq < 1:
+            raise ValueError("block_size and max_blocks_per_seq must be >= 1")
+        self.n_layers = n_layers
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_blocks_per_seq = max_blocks_per_seq
+        shape = (n_layers, n_blocks, block_size, n_kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self._free: List[int] = list(range(1, n_blocks))  # LIFO reuse
+        self._live: set = set()
+
+    # ---- free-list accounting ---------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return len(self._live)
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` positions."""
+        return max(1, -(-n_tokens // self.block_size))
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` blocks off the free list (all-or-nothing)."""
+        if n > self.max_blocks_per_seq:
+            raise BlockPoolExhausted(
+                f"request needs {n} blocks > max_blocks_per_seq="
+                f"{self.max_blocks_per_seq}")
+        if n > len(self._free):
+            raise BlockPoolExhausted(
+                f"need {n} blocks, free list has {len(self._free)} "
+                f"({len(self._live)} live)")
+        taken = [self._free.pop() for _ in range(n)]
+        for b in taken:
+            assert b not in self._live and b != TRASH_BLOCK  # never double
+            self._live.add(b)
+        return taken
+
+    def free(self, blocks: Iterable[int]) -> None:
+        """Return a request's blocks to the free list (eviction reclaim)."""
+        for b in blocks:
+            if b == TRASH_BLOCK:
+                raise ValueError("cannot free the trash block")
+            if b not in self._live:
+                raise ValueError(f"double free / foreign block {b}")
+            self._live.discard(b)
+            self._free.append(b)
+
+    def table_row(self, blocks: Sequence[int]) -> np.ndarray:
+        """A request's block-table row: its blocks, trash-padded to width."""
+        row = np.full((self.max_blocks_per_seq,), TRASH_BLOCK, np.int32)
+        row[: len(blocks)] = np.asarray(blocks, np.int32)
+        return row
+
+    def trash_row(self) -> np.ndarray:
+        """All-trash row for inactive / padded micro-batch slots."""
+        return np.full((self.max_blocks_per_seq,), TRASH_BLOCK, np.int32)
+
+    # ---- jit-side pool hand-back ------------------------------------------
+    def update(self, k: jax.Array, v: jax.Array) -> None:
+        """Adopt the pool arrays a jit step returned (functional update)."""
+        if k.shape != self.k.shape or v.shape != self.v.shape:
+            raise ValueError(
+                f"pool shape changed: {k.shape} vs {self.k.shape}")
+        self.k, self.v = k, v

@@ -1,0 +1,87 @@
+"""Property-test compatibility layer: real hypothesis when installed, a
+minimal deterministic fallback otherwise.
+
+The two property suites (test_core.py, test_accuracy_modes.py) were the
+tier-1 run's only perpetually-skipped tests: they ``importorskip``'d
+hypothesis, which requirements-dev.txt installs on CI but bare environments
+(including the repo's own verify gate) often lack.  The subset of hypothesis
+those suites use — ``@given`` over ``st.integers``/``st.sampled_from``/
+``st.floats`` with ``@settings(max_examples=..., deadline=None)`` — is small
+enough to emulate exactly: the fallback runs each property ``max_examples``
+times against a per-test deterministic RNG (seeded from the test name, so
+failures reproduce).  Real hypothesis still wins when available (shrinking,
+example databases, richer strategies).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic micro-fallback
+
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def floats(min_value, max_value, **_ignored):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._pt_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: deliberately no functools.wraps — copying fn's signature
+            # would make pytest treat the strategy parameters as fixtures;
+            # the wrapper must present a zero-argument signature
+            def wrapper():
+                n = getattr(wrapper, "_pt_max_examples", 20)
+                rng = np.random.default_rng(
+                    zlib.adler32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    extra = [s.sample(rng) for s in arg_strategies]
+                    kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                    fn(*extra, **kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.hypothesis_fallback = True
+            return wrapper
+
+        return deco

@@ -5,10 +5,10 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+# real hypothesis when installed (CI: requirements-dev.txt), deterministic
+# fallback otherwise — this suite must never skip wholesale (it was one of
+# the two perpetually-skipped tier-1 files)
+from proptest_compat import given, settings, st
 
 from repro.core import PrecisionMode, mp_matmul
 from repro.core.modes import MODE_TABLE

@@ -4,10 +4,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip(
-    "hypothesis",
-    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+# real hypothesis when installed (CI: requirements-dev.txt), deterministic
+# fallback otherwise — this suite must never skip wholesale (it was one of
+# the two perpetually-skipped tier-1 files)
+from proptest_compat import given, settings, st
 
 from repro.core import (
     MODE_TABLE, PrecisionMode, classify, decompose, exception_counts,

@@ -1,6 +1,6 @@
 """Dispatch-layer suite: backend parity per mode (ref / pallas_interpret /
 sharded), mode-aware collective payloads, autotuner cache round-trips, and
-registry routing.  DESIGN.md §5-§6."""
+registry routing.  DESIGN.md §5, §7."""
 import os
 
 import numpy as np

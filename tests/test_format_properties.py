@@ -1,0 +1,143 @@
+"""Property suite for run-time-registered formats: the paper's mode/accuracy
+table as executable properties over *random* MPFormat configurations.
+
+For random ``MPFormat(mantissa_bits, n_limbs, max_order)`` and random finite
+inputs:
+
+  * limb decompose -> recombine round-trips **exactly** once the limbs carry
+    the full fp32 mantissa (3+ limbs), and within the limb-implied residual
+    bound below that;
+  * ``mp_matmul`` on the ref backend stays within the format's
+    mantissa-implied relative error budget (the registry's
+    ``rel_err_bound``), with a small tensor-norm dispersion allowance.
+
+Runs under real hypothesis when installed, the deterministic fallback
+otherwise (proptest_compat).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from proptest_compat import given, settings, st
+
+from repro.core import formats as formats_lib
+from repro.core import limbs as limbs_lib
+from repro.core.mpmatmul import mp_matmul
+from repro.kernels import ref
+
+
+def _random_format(mantissa_bits: int, n_limbs: int, order_frac: int):
+    """Register (idempotently) a format for one sampled parameter triple.
+
+    ``max_order`` is derived from ``order_frac`` in [0, 2] so the sampled
+    space always satisfies the registry's 0 <= max_order <= 2(n_limbs-1)
+    invariant."""
+    max_order = (2 * (n_limbs - 1)) * order_frac // 2
+    name = f"PROP{mantissa_bits}_{n_limbs}_{max_order}"
+    fmt = formats_lib.register_format(
+        name, mantissa_bits=mantissa_bits, n_limbs=n_limbs,
+        max_order=max_order)
+    return fmt
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_limbs=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+    log_scale=st.sampled_from([-12, -4, 0, 4, 12]),
+)
+def test_decompose_recombine_roundtrip(n_limbs, seed, log_scale):
+    """3+ bf16 limbs hold all 24 fp32 mantissa bits: the cascade must
+    round-trip bit-exactly.  Fewer limbs round-trip within the limb-implied
+    residual bound 2^-(8k-1) (round-to-nearest takes >= 8 bits per limb)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((64,)).astype(np.float32) * (2.0 ** log_scale)
+    xj = jnp.asarray(x)
+    back = np.asarray(limbs_lib.reconstruct(limbs_lib.decompose(xj, n_limbs)))
+    if n_limbs >= 3:
+        np.testing.assert_array_equal(back, x)
+    else:
+        rel = np.max(np.abs(back - x)) / max(np.max(np.abs(x)), 1e-30)
+        assert rel <= 2.0 ** (-8 * n_limbs + 1), (n_limbs, rel)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mantissa_bits=st.sampled_from([8, 12, 16, 23, 30]),
+    n_limbs=st.integers(1, 4),
+    order_frac=st.integers(0, 2),
+    seed=st.integers(0, 2**16),
+)
+def test_registered_format_roundtrip_at_capacity(mantissa_bits, n_limbs,
+                                                 order_frac, seed):
+    """Values pre-rounded to a format's limb capacity are fixed points of
+    decompose->recombine for that format — the 'rounding of bits before
+    multiplication' loses bits exactly once."""
+    fmt = _random_format(mantissa_bits, n_limbs, order_frac)
+    try:
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((128,)).astype(np.float32))
+        rounded = limbs_lib.round_to_limbs(x, fmt.n_limbs)
+        again = limbs_lib.reconstruct(
+            limbs_lib.decompose(rounded, fmt.n_limbs))
+        np.testing.assert_array_equal(np.asarray(again), np.asarray(rounded))
+    finally:
+        formats_lib.unregister_format(fmt.name)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mantissa_bits=st.sampled_from([8, 12, 16, 23, 30]),
+    n_limbs=st.integers(1, 4),
+    order_frac=st.integers(0, 2),
+    m=st.sampled_from([8, 32]),
+    k=st.sampled_from([64, 160]),
+    n=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_error_within_format_bound(mantissa_bits, n_limbs, order_frac,
+                                          m, k, n, seed):
+    """ref-backend mp_matmul error obeys the registered format's
+    mantissa-implied ``rel_err_bound`` (x4 tensor-norm dispersion allowance:
+    the bound is defined on operand mantissas, the check is a matrix norm)."""
+    fmt = _random_format(mantissa_bits, n_limbs, order_frac)
+    try:
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        out = mp_matmul(a, b, fmt, backend="ref")
+        gold = ref.matmul_golden_f64(a, b)
+        rel = float(
+            np.linalg.norm(np.asarray(out, np.float64) - gold)
+            / max(np.linalg.norm(gold), 1e-30))
+        assert rel < 4.0 * fmt.rel_err_bound, (fmt, rel, fmt.rel_err_bound)
+    finally:
+        formats_lib.unregister_format(fmt.name)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_limbs=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_more_limbs_never_hurt(n_limbs, seed):
+    """Monotonicity across the mode table: a format carrying one more limb
+    (same max order policy) is at least as accurate on the same operands —
+    the ordering that makes the paper's accuracy dial meaningful."""
+    lo = _random_format(8 * n_limbs, n_limbs, 2)
+    hi = _random_format(8 * (n_limbs + 1), n_limbs + 1, 2)
+    try:
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.standard_normal((16, 96)).astype(np.float32))
+        b = jnp.asarray(rng.standard_normal((96, 24)).astype(np.float32))
+        gold = ref.matmul_golden_f64(a, b)
+
+        def rel(fmt):
+            out = mp_matmul(a, b, fmt, backend="ref")
+            return float(np.linalg.norm(np.asarray(out, np.float64) - gold)
+                         / max(np.linalg.norm(gold), 1e-30))
+
+        # 2x slack absorbs rounding luck at equal effective precision
+        assert rel(hi) <= 2.0 * rel(lo) + 1e-12, (n_limbs, rel(lo), rel(hi))
+    finally:
+        formats_lib.unregister_format(lo.name)
+        formats_lib.unregister_format(hi.name)
