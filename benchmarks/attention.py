@@ -1,0 +1,159 @@
+"""Fused flash attention vs the chunk-scan (ISSUE 5 / EXPERIMENTS.md §Perf.9).
+
+Two measurements, CPU-sized (relative numbers; rooflines give the hardware
+view):
+
+  * **prefill tokens/s** — full causal self-attention at M8/M16/M23 over
+    divisible and ragged sequence lengths, once through the legacy
+    chunk-scan (``models.attention.chunked_attention``: a lax.scan of
+    per-chunk ``mp_matmul`` launches with the probability matrix
+    round-tripping between them) and once through the fused path
+    (``mp_attention`` -> one blocked online-softmax program; on the Pallas
+    backends P never reaches HBM).  Both are jitted, so the delta is the
+    scan/launch/P-traffic structure, not compile time.
+  * **paged-decode step latency** — one scheduler-shaped decode step per
+    mode against a block pool with mixed per-slot lengths, through the
+    bounded-gather fallback and through the paged kernel (interpret on
+    CPU), plus the bounded-vs-trash-padded gather delta the scheduler's
+    table slicing buys.
+
+    PYTHONPATH=src python -m benchmarks.attention --json-out BENCH_attn.json
+    # CI gate: fused prefill must beat the chunk-scan somewhere
+    PYTHONPATH=src python -m benchmarks.attention --min-speedup 1.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import dispatch
+from repro.core.mpmatmul import mp_attention
+from repro.core.policy import PrecisionPolicy
+from repro.models.attention import chunked_attention
+
+MODES = ("M8", "M16", "M23")
+PREFILL_SHAPES = (  # (B, S, H, Dh): divisible and ragged ("mixed") lengths
+    (1, 256, 4, 64),
+    (1, 512, 4, 64),
+    (2, 383, 4, 64),
+)
+CHUNK = 128
+
+
+def bench_prefill() -> float:
+    """Fused vs chunk-scan causal prefill; returns the best fused speedup."""
+    rng = np.random.default_rng(0)
+    best = 0.0
+    for B, S, H, Dh in PREFILL_SHAPES:
+        q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+        for mode in MODES:
+            pol = PrecisionPolicy({"attn_qk": mode, "attn_pv": mode})
+            chunk_fn = jax.jit(lambda q, k, v, pol=pol: chunked_attention(
+                q, k, v, pol, causal=True, q_chunk=CHUNK, kv_chunk=CHUNK))
+            fused_fn = jax.jit(lambda q, k, v, mode=mode: mp_attention(
+                q, k, v, mode, mode, causal=True, backend="ref"))
+            t_chunk = common.time_us(chunk_fn, q, k, v)
+            t_fused = common.time_us(fused_fn, q, k, v)
+            toks = B * S
+            speedup = t_chunk / t_fused
+            best = max(best, speedup)
+            common.emit(
+                f"attn/prefill_chunk_{mode}_{B}x{S}", t_chunk,
+                f"{toks / (t_chunk / 1e6):.0f} tok/s chunk-scan "
+                f"(q_chunk={CHUNK}, P via HBM)")
+            common.emit(
+                f"attn/prefill_fused_{mode}_{B}x{S}", t_fused,
+                f"{toks / (t_fused / 1e6):.0f} tok/s fused "
+                f"(speedup={speedup:.2f}x, P never materializes)")
+    return best
+
+
+def bench_paged_decode() -> None:
+    """Scheduler-shaped paged decode step at mixed per-slot lengths."""
+    rng = np.random.default_rng(1)
+    B, H, hk, Dh = 8, 8, 4, 64
+    n_blocks, bs, max_blocks = 64, 16, 32
+    kp = jnp.asarray(rng.standard_normal((n_blocks, bs, hk, Dh)) * 0.1,
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_blocks, bs, hk, Dh)) * 0.1,
+                     jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, Dh)), jnp.float32)
+    # mixed lengths -> 4 used blocks max (the bounded-table width)
+    lengths = jnp.asarray(rng.integers(5, 4 * bs, size=B), jnp.int32)
+    used = 4
+    rows = []
+    nxt = 1
+    for b in range(B):
+        need = int(np.ceil(float(lengths[b]) / bs))
+        rows.append([nxt + i for i in range(need)] + [0] * (used - need))
+        nxt += need
+    table = jnp.asarray(rows, jnp.int32)
+    table_padded = jnp.concatenate(  # trash-padded to max_blocks (old shape)
+        [table, jnp.zeros((B, max_blocks - used), jnp.int32)], axis=1)
+
+    for mode in MODES:
+        fall = jax.jit(lambda q, t, ln, mode=mode: dispatch.dispatch_paged_attention(
+            q, kp, vp, t, ln, mode, mode, backend="ref"))
+        kern = jax.jit(lambda q, t, ln, mode=mode: dispatch.dispatch_paged_attention(
+            q, kp, vp, t, ln, mode, mode, backend="pallas_interpret"))
+        t_fall = common.time_us(fall, q, table, lengths)
+        t_kern = common.time_us(kern, q, table, lengths)
+        t_padded = common.time_us(fall, q, table_padded, lengths)
+        common.emit(f"attn/paged_decode_gather_{mode}", t_fall,
+                    f"B={B} bounded gather (W={used}) + mp einsums")
+        common.emit(f"attn/paged_decode_kernel_{mode}", t_kern,
+                    f"B={B} block-table kernel (interpret on CPU)")
+        common.emit(f"attn/paged_decode_gather_padded_{mode}", t_padded,
+                    f"unbounded W={max_blocks} gather "
+                    f"({t_padded / t_fall:.2f}x the bounded step)")
+
+
+def run() -> float:
+    best = bench_prefill()
+    bench_paged_decode()
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default="",
+                    help="artifact path ('' disables the JSON sink)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless fused prefill beats the chunk-scan by "
+                         "this factor on at least one (mode, shape) cell "
+                         "(CI gate; 0 = record only)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    best = run()
+
+    if args.json_out:
+        artifact = {
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "best_prefill_speedup": round(best, 3),
+            "rows": common.rows(),
+        }
+        with open(args.json_out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"wrote {len(common.rows())} rows -> {args.json_out}",
+              file=sys.stderr)
+    if args.min_speedup and best < args.min_speedup:
+        raise SystemExit(
+            f"fused attention best speedup {best:.2f}x < {args.min_speedup}x")
+    print(f"best fused prefill speedup: {best:.2f}x", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

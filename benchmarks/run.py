@@ -17,15 +17,16 @@ def main() -> None:
                     help="artifact path ('' disables the JSON sink)")
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, common, e2e_train, fused_proj, roofline,
-                            table2_multiplier, table3_fp_units,
-                            table4_comparison)
+    from benchmarks import (accuracy, attention, common, e2e_train,
+                            fused_proj, roofline, table2_multiplier,
+                            table3_fp_units, table4_comparison)
 
     print("name,us_per_call,derived")
     table2_multiplier.run()
     table3_fp_units.run()
     table4_comparison.run()
     fused_proj.run()
+    attention.run()
     accuracy.run()
     e2e_train.run()
     roofline.run()

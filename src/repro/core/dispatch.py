@@ -41,10 +41,11 @@ from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import context as context_lib
-from repro.core.formats import FormatLike, MPFormat, resolve
+from repro.core.formats import FormatLike, MPFormat, is_auto, resolve
 from repro.core.limbs import DD, PrelimbedWeight
 from repro.kernels import ref as ref_backend
 
@@ -342,3 +343,167 @@ def dispatch_fused(
             for w in ws]
     return ref_backend.apply_epilogue(raws, gate=gate, biases=biases,
                                       residual=residual, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-precision attention (QK^T and P·V at independent formats)
+# ---------------------------------------------------------------------------
+def _attn_blocks(B_H: int, S: int, T: int, Dh: int, fmt_qk: MPFormat,
+                 fmt_pv: MPFormat, causal: bool, interpret: bool):
+    """Autotune-table lookup for the fused flash-attention kernel — same
+    discipline as :func:`_tuned_blocks`: sweep only when the context's
+    autotune flag is set, otherwise a pure table read."""
+    from repro.kernels import autotune
+
+    if context_lib.autotune_enabled():
+        return autotune.autotune_attention(
+            B_H, S, T, Dh, fmt_qk, fmt_pv, causal=causal,
+            interpret=interpret)
+    blocks = autotune.lookup_attention(B_H, S, T, Dh, fmt_qk, fmt_pv,
+                                       causal=causal)
+    return blocks if blocks is not None else (None, None)
+
+
+def dispatch_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mode_qk: FormatLike,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
+) -> jax.Array:
+    """Route one fused attention call (q (B, S, H, Dh), k/v (B, T, H, Dh)
+    with H already GQA-repeated) to a backend.
+
+    pallas / pallas_interpret run the flash kernel (kernels/mp_attention.py,
+    block sizes from the autotune table); every other backend — ref, sharded
+    (attention is batch-local: K-sharding the head-dim contraction cannot
+    help, and GSPMD shards the batch/head dims of plain jnp ops), and
+    registered extension backends (which only advertise the binary matmul
+    contract) — runs the blocked jnp oracle, which shares the kernel's
+    online-softmax core.  Sequence-parallel *training* shapes never reach
+    this route: models/attention.py keeps them on the chunk-scan path."""
+    name = backend or context_lib.current_context().backend
+    fmt_qk = resolve(mode_qk)
+    fmt_pv = resolve(mode_pv if mode_pv is not None else mode_qk)
+    if name in ("pallas", "pallas_interpret"):
+        from repro.kernels import mp_attention as attn_kernels
+
+        interpret = name == "pallas_interpret" or jax.default_backend() == "cpu"
+        B, S, H, Dh = q.shape
+        bq, bkv = block_q, block_kv
+        if bq is None and bkv is None:
+            bq, bkv = _attn_blocks(B * H, S, k.shape[1], Dh, fmt_qk, fmt_pv,
+                                   causal, interpret)
+        return attn_kernels.mp_attention_pallas(
+            q, k, v, fmt_qk, fmt_pv, causal=causal, scale=scale,
+            q_offset=q_offset, out_dtype=out_dtype, interpret=interpret,
+            block_q=bq, block_kv=bkv)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
+    return ref_backend.mp_attention_ref(
+        q, k, v, fmt_qk, fmt_pv, causal=causal, scale=scale,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+        out_dtype=out_dtype)
+
+
+def masked_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths,
+    mode_qk: FormatLike,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Policy-obeying decode-attention einsum path: q (B, 1, H, Dh) against
+    k/v (B, T, H, Dh) (H already repeated), masked by ``lengths`` (scalar or
+    per-slot (B,)).  Both contractions route through ``mp_matmul`` at the
+    resolved ``attn_qk`` / ``attn_pv`` formats — including AUTO — so the
+    docstring claim "both attention einsums run through mp_matmul" holds on
+    every backend; the ops stay plain batched matmuls, so GSPMD can still
+    shard the cache sequence dim (sequence-parallel decode) exactly like the
+    v1 einsums.  q is scaled *before* the contraction so the limb cascade
+    decomposes the same operand the fused kernels do."""
+    from repro.core.mpmatmul import (  # lazy: mpmatmul imports us
+        mp_einsum_qk,
+        mp_matmul,
+    )
+
+    B, S1, H, Dh = q.shape
+    T = k.shape[1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dh))
+    mode_pv = mode_pv if mode_pv is not None else mode_qk
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale  # (B, H, 1, Dh)
+    kh = k.transpose(0, 2, 1, 3).astype(jnp.float32)          # (B, H, T, Dh)
+    vh = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    logits = mp_einsum_qk(qh, kh, mode_qk, backend=backend)    # (B, H, 1, T)
+    ln = lengths.reshape(-1, 1, 1, 1) if getattr(lengths, "ndim", 0) \
+        else lengths
+    mask = jnp.arange(T)[None, None, None, :] < ln
+    logits = jnp.where(mask, logits, ref_backend.ATTN_NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # re-zero masked probabilities: bit-identical for rows with any valid
+    # position (their masked entries already underflowed to exact 0), and
+    # fully-masked rows (length-0 inactive slots) flush exact zeros instead
+    # of a mean over trash — matching the paged kernel's invariant
+    p = jnp.where(mask, p, 0.0)
+    out = mp_matmul(p, vh, mode_pv, backend=backend)           # (B, H, 1, Dh)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def dispatch_paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    mode_qk: FormatLike,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Route one paged-decode attention step: q (B, 1, H, Dh) against the
+    block pool (n_blocks, bs, Hkv, Dh) through the slot block tables.
+
+    pallas / pallas_interpret run the paged flash kernel — K/V blocks are
+    DMA'd through the scalar-prefetched block table, so the contiguous
+    ``pool[table]`` gather never materializes in HBM.  Every other backend
+    (ref, sharded/seq-parallel decode, extension backends) falls back to the
+    gather + policy-obeying einsum path; the gather is bounded by the table
+    width the scheduler passes (sliced to the bucket's used-block count).
+    AUTO formats analyze raw operand values, so they always take the einsum
+    fallback."""
+    name = backend or context_lib.current_context().backend
+    B, S1, H, Dh = q.shape
+    n_blocks, bs, hk, _ = k_pool.shape
+    n_rep = H // hk
+    is_auto_fmt = is_auto(mode_qk) or is_auto(
+        mode_pv if mode_pv is not None else mode_qk)
+    if name in ("pallas", "pallas_interpret") and not is_auto_fmt:
+        from repro.kernels import mp_attention as attn_kernels
+
+        interpret = name == "pallas_interpret" or jax.default_backend() == "cpu"
+        out = attn_kernels.mp_paged_attention_pallas(
+            q.reshape(B, H, Dh), k_pool, v_pool, block_table, lengths,
+            mode_qk, mode_pv, scale=scale, interpret=interpret)
+        return out.reshape(B, S1, H, Dh).astype(q.dtype)
+    W = block_table.shape[1]
+    kk = k_pool[block_table].reshape(B, W * bs, hk, Dh)
+    vv = v_pool[block_table].reshape(B, W * bs, hk, Dh)
+    if n_rep > 1:
+        kk = jnp.repeat(kk, n_rep, axis=2)
+        vv = jnp.repeat(vv, n_rep, axis=2)
+    return masked_decode_attention(q, kk, vv, lengths, mode_qk, mode_pv,
+                                   scale=scale, backend=name)

@@ -357,6 +357,128 @@ def mp_einsum_qk(
     return mp_matmul(q, jnp.swapaxes(k, -1, -2), mode, **kw)
 
 
+# ---------------------------------------------------------------------------
+# Fused multi-precision flash attention
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=tuple(range(3, 14)))
+def _mp_attention_diff(q, k, v, fmt_qk, fmt_pv, dgrad_qk, wgrad_qk,
+                       dgrad_pv, wgrad_pv, causal, scale, q_offset, backend,
+                       out_dtype):
+    return dispatch_lib.dispatch_attention(
+        q, k, v, fmt_qk, fmt_pv, causal=causal, scale=scale,
+        q_offset=q_offset, backend=backend, out_dtype=out_dtype)
+
+
+def _attn_fwd(q, k, v, fmt_qk, fmt_pv, dgrad_qk, wgrad_qk, dgrad_pv,
+              wgrad_pv, causal, scale, q_offset, backend, out_dtype):
+    out = dispatch_lib.dispatch_attention(
+        q, k, v, fmt_qk, fmt_pv, causal=causal, scale=scale,
+        q_offset=q_offset, backend=backend, out_dtype=out_dtype)
+    return out, (q, k, v)
+
+
+def _attn_bwd(fmt_qk, fmt_pv, dgrad_qk, wgrad_qk, dgrad_pv, wgrad_pv,
+              causal, scale, q_offset, backend, out_dtype, res, g):
+    """Flash-attention backward, decomposed into dispatch calls at the
+    policy's backward formats (the same discipline as the matmul VJP):
+
+        dV = P^T · dO            at wgrad_pv      (weight-side of P·V)
+        dP = dO · V^T            at dgrad_pv      (activation grad of P·V)
+        dS = P ∘ (dP - rowsum(dP ∘ P))            (softmax Jacobian, f32)
+        dQ = dS · K  (· scale)   at dgrad_qk
+        dK = dS^T · Qs           at wgrad_qk      (Qs pre-scaled, as fwd)
+
+    P is rematerialized densely from the saved (q, k, v) — the standard
+    flash recompute, here at the *forward* QK format so the backward sees
+    the same quantized logits the primal produced (up to the fused kernel's
+    block reassociation)."""
+    q, k, v = res
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale
+    kh = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vh = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    logits = _run(qh, jnp.swapaxes(kh, -1, -2), fmt_qk, backend, jnp.float32)
+    mask = None
+    if causal:
+        q_pos = q_offset + jnp.arange(S)
+        mask = q_pos[:, None] >= jnp.arange(T)[None, :]
+        logits = jnp.where(mask, logits, _ref_backend.ATTN_NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)                     # (B, H, S, T)
+    gh = g.transpose(0, 2, 1, 3).astype(jnp.float32)        # (B, H, S, Dh)
+
+    dg_qk = dgrad_qk if dgrad_qk is not None else fmt_qk
+    wg_qk = wgrad_qk if wgrad_qk is not None else fmt_qk
+    dg_pv = dgrad_pv if dgrad_pv is not None else fmt_pv
+    wg_pv = wgrad_pv if wgrad_pv is not None else fmt_pv
+
+    dv = _run(jnp.swapaxes(p, -1, -2), gh, wg_pv, backend, jnp.float32)
+    dp = _run(gh, jnp.swapaxes(vh, -1, -2), dg_pv, backend, jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    if mask is not None:
+        ds = jnp.where(mask, ds, 0.0)
+    dq = _run(ds, kh, dg_qk, backend, jnp.float32) * scale
+    dk = _run(jnp.swapaxes(ds, -1, -2), qh, wg_qk, backend, jnp.float32)
+    to_bshd = lambda x: x.transpose(0, 2, 1, 3)
+    return (to_bshd(dq).astype(q.dtype), to_bshd(dk).astype(k.dtype),
+            to_bshd(dv).astype(v.dtype))
+
+
+_mp_attention_diff.defvjp(_attn_fwd, _attn_bwd)
+
+
+def mp_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mode_qk: FormatLike = PrecisionMode.M16,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    bwd_mode: Optional[FormatLike] = None,
+    dgrad_qk_mode: Optional[FormatLike] = None,
+    wgrad_qk_mode: Optional[FormatLike] = None,
+    dgrad_pv_mode: Optional[FormatLike] = None,
+    wgrad_pv_mode: Optional[FormatLike] = None,
+    backend: Optional[str] = None,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Fused multi-precision flash attention as a public op (DESIGN.md §4a).
+
+    q: (B, S, H, Dh); k/v: (B, T, H, Dh) with H already GQA-repeated.
+    QK^T runs the limb cascade at ``mode_qk`` and P·V at ``mode_pv``
+    (defaults to ``mode_qk``) — the ``attn_qk`` / ``attn_pv`` policy op
+    classes — with the online softmax fused between them, so the
+    probability matrix never materializes in HBM on the Pallas backends.
+    Differentiable: the custom VJP rematerializes P densely and decomposes
+    the backward into dispatch calls at the per-side backward formats (each
+    defaults to ``bwd_mode``, then its forward format).
+
+    AUTO formats analyze raw operand values per op and are not supported
+    here — resolve a static format first (models fall back to the chunk-scan
+    path, whose per-chunk ``mp_matmul`` calls handle AUTO natively).
+    """
+    if is_auto(mode_qk) or (mode_pv is not None and is_auto(mode_pv)):
+        raise ValueError(
+            "mp_attention needs static formats (AUTO analyzes operands "
+            "per matmul; use the chunk-scan path for AUTO policies)")
+    backend = backend or context_lib.current_context().backend
+    fmt_qk = resolve(mode_qk)
+    fmt_pv = resolve(mode_pv if mode_pv is not None else mode_qk)
+    if scale is None:
+        scale = 1.0 / float(q.shape[-1]) ** 0.5
+    bwd = _resolve_bwd(bwd_mode)
+    dg_qk = _resolve_bwd(dgrad_qk_mode) if dgrad_qk_mode is not None else bwd
+    wg_qk = _resolve_bwd(wgrad_qk_mode) if wgrad_qk_mode is not None else bwd
+    dg_pv = _resolve_bwd(dgrad_pv_mode) if dgrad_pv_mode is not None else bwd
+    wg_pv = _resolve_bwd(wgrad_pv_mode) if wgrad_pv_mode is not None else bwd
+    return _mp_attention_diff(q, k, v, fmt_qk, fmt_pv, dg_qk, wg_qk, dg_pv,
+                              wg_pv, causal, float(scale), q_offset, backend,
+                              out_dtype)
+
+
 def mode_flops(mode: FormatLike, m: int, k: int, n: int) -> int:
     """MXU MAC-FLOPs for one mp_matmul (the paper's 'area x time' cost axis)."""
     return 2 * m * k * n * resolve(mode).n_products

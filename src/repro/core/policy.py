@@ -117,15 +117,9 @@ def _specificity(pattern: str) -> int:
 
 def _best_match(rules: Tuple[Tuple[str, OpRule], ...], op_class: str
                 ) -> Optional[OpRule]:
-    best, best_key = None, None
-    for i, (pattern, rule) in enumerate(rules):
-        if pattern == op_class:
-            return rule  # exact beats any glob
-        if fnmatch.fnmatchcase(op_class, pattern):
-            key = (_specificity(pattern), -i)  # most literal; ties: earliest
-            if best_key is None or key > best_key:
-                best, best_key = rule, key
-    return best
+    """Exact beats any glob; globs rank by literal count, ties earliest
+    (the match-strength variant below is the single implementation)."""
+    return _best_match_key(rules, op_class)[0]
 
 
 # built-in tier: consulted only when no user rule matches (v1 field defaults)
@@ -134,6 +128,33 @@ DEFAULT_RULES: Tuple[Tuple[str, OpRule], ...] = (
     ("lm_head", OpRule("M23")),      # logits feed the loss
     ("*", OpRule("M16")),
 )
+
+# Attention-kernel op classes and their legacy einsum aliases.  The fused
+# flash-attention path resolves its two contractions as ``attn_qk`` (QK^T)
+# and ``attn_pv`` (P·V); v1/v2 policies configured those einsums through
+# ``attn_logits`` / ``attn_out``, so each new class falls back to its alias:
+# an exact rule for the new class wins outright; otherwise the more *specific*
+# match between the new-class pattern match and the alias match wins, with
+# ties going to the alias — a policy written before the split resolves
+# exactly as it always did (``{"attn_logits": "M23", "*": "M8"}`` still puts
+# QK^T at M23), while new policies can glob ``attn_qk``/``attn_pv`` like any
+# other op class.
+ATTN_OP_ALIASES: Dict[str, str] = {"attn_qk": "attn_logits",
+                                   "attn_pv": "attn_out"}
+
+
+def _best_match_key(rules: Tuple[Tuple[str, OpRule], ...], op_class: str):
+    """Like :func:`_best_match` but also returns the match strength key
+    (exact matches rank above any glob)."""
+    best, best_key = None, None
+    for i, (pattern, rule) in enumerate(rules):
+        if pattern == op_class:
+            return rule, (float("inf"), 0)
+        if fnmatch.fnmatchcase(op_class, pattern):
+            key = (_specificity(pattern), -i)
+            if best_key is None or key > best_key:
+                best, best_key = rule, key
+    return best, best_key
 
 class PrecisionPolicy:
     """Glob-resolved mapping from op-class names to precision formats.
@@ -178,9 +199,23 @@ class PrecisionPolicy:
         return self._rules
 
     def _rule(self, op_class: str) -> OpRule:
-        rule = _best_match(self._rules, op_class)
-        if rule is None:
-            rule = _best_match(DEFAULT_RULES, op_class)
+        alias = ATTN_OP_ALIASES.get(op_class)
+        if alias is not None:
+            rule, key = _best_match_key(self._rules, op_class)
+            if key is not None and key[0] == float("inf"):
+                return rule  # exact rule for the new class wins outright
+            a_rule, a_key = _best_match_key(self._rules, alias)
+            # alias wins ties (pre-split policies resolve unchanged); a
+            # more-literal glob for the new class wins over it
+            if a_rule is not None and (rule is None or a_key >= key):
+                rule = a_rule
+            if rule is None:
+                rule = _best_match(DEFAULT_RULES, alias) \
+                    or _best_match(DEFAULT_RULES, op_class)
+        else:
+            rule = _best_match(self._rules, op_class)
+            if rule is None:
+                rule = _best_match(DEFAULT_RULES, op_class)
         assert rule is not None  # DEFAULT_RULES ends with "*"
         return rule
 

@@ -235,6 +235,135 @@ def lookup(M: int, K: int, N: int, mode: FormatLike, dtype=jnp.float32, *,
     return bm, bk, bn
 
 
+# ---------------------------------------------------------------------------
+# Fused flash-attention variant (kernels/mp_attention.py).  Attention keys
+# live in the SAME per-device table as the matmul keys — the "attn|" prefix
+# cannot collide with a matmul key (those start with a format name), so old
+# cache files load unchanged and matmul keys stay byte-identical.
+# ---------------------------------------------------------------------------
+AttnBlockSizes = Tuple[int, int]  # (block_q, block_kv)
+
+_BQ_CANDS = (32, 64, 128, 256)
+_BKV_CANDS = (128, 256, 512)
+
+
+def attention_table_key(B_H: int, S: int, T: int, Dh: int,
+                        mode_qk: FormatLike, mode_pv: FormatLike, *,
+                        causal: bool, paged: bool = False) -> str:
+    """Cache key for one attention cell.  Two format names (QK^T and P·V
+    resolve independently through the policy), the folded batch·heads /
+    sequence / head-dim shape, and the causal / paged variant bits — block
+    winners differ across all of them (causal halves the useful MXU work
+    per kv column).  No sweep writes ``paged=True`` entries today — the
+    paged kernel's kv tile is fixed by the pool block size — but the bit
+    partitions the key space so a future paged sweep can never collide
+    with a dense cell of the same shape."""
+    return (f"attn|{resolve(mode_qk).name}/{resolve(mode_pv).name}"
+            f"|{B_H}x{S}x{T}x{Dh}|c{int(bool(causal))}|p{int(bool(paged))}")
+
+
+def attention_candidate_blocks(
+    S: int, T: int, Dh: int,
+    mode_qk: FormatLike, mode_pv: FormatLike, *,
+    out_dtype=jnp.float32,
+    vmem_budget: int = 0,
+) -> List[AttnBlockSizes]:
+    """Aligned (block_q, block_kv) candidates under the VMEM budget, using
+    the attention variant's true footprint (mp_attention.attn_vmem_bytes)."""
+    from repro.kernels import mp_attention as attn_kern
+
+    budget = vmem_budget or VMEM_BUDGET_BYTES
+    sp, tp = _round_up(S, 8), _round_up(T, 128)
+    dp = _round_up(Dh, 128)
+    out: List[AttnBlockSizes] = []
+    for bq in _BQ_CANDS:
+        if bq > sp and bq != _BQ_CANDS[0]:
+            continue
+        for bkv in _BKV_CANDS:
+            if bkv > tp and bkv != _BKV_CANDS[0]:
+                continue
+            cand = (min(bq, sp), min(bkv, tp))
+            if attn_kern.attn_vmem_bytes(mode_qk, mode_pv, cand[0], cand[1],
+                                         dp, out_dtype=out_dtype) > budget:
+                continue
+            if cand not in out:
+                out.append(cand)
+    return out
+
+
+def autotune_attention(
+    B_H: int, S: int, T: int, Dh: int,
+    mode_qk: FormatLike,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    causal: bool = True,
+    interpret: bool = False,
+    iters: int = 3,
+    candidates: Optional[Sequence[AttnBlockSizes]] = None,
+) -> AttnBlockSizes:
+    """Sweep (block_q, block_kv) for one attention cell; persist the winner
+    in the shared per-device-kind table (returns the cached winner when the
+    key exists)."""
+    from repro.kernels import mp_attention as attn_kern
+
+    mode_qk = resolve(mode_qk)
+    mode_pv = resolve(mode_pv if mode_pv is not None else mode_qk)
+    key = attention_table_key(B_H, S, T, Dh, mode_qk, mode_pv, causal=causal)
+    table = load_table()
+    if key in table:
+        bq, bkv = table[key]
+        return bq, bkv
+
+    cands = list(candidates) if candidates is not None else \
+        attention_candidate_blocks(S, T, Dh, mode_qk, mode_pv)
+    if not cands:
+        raise ValueError(
+            f"no feasible attention blocks for {key} under "
+            f"{VMEM_BUDGET_BYTES} bytes of VMEM")
+
+    import numpy as np
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, S, B_H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, T, B_H, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, T, B_H, Dh)), jnp.float32)
+
+    best, best_t = None, float("inf")
+    for bq, bkv in cands:
+        fn = jax.jit(lambda x, y, z, bq=bq, bkv=bkv:
+                     attn_kern.mp_attention_pallas(
+                         x, y, z, mode_qk, mode_pv, causal=causal,
+                         interpret=interpret, block_q=bq, block_kv=bkv))
+        jax.block_until_ready(fn(q, k, v))  # compile
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(q, k, v))
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        t = times[len(times) // 2]
+        if t < best_t:
+            best, best_t = (bq, bkv), t
+
+    table[key] = list(best)
+    save_table(table)
+    return best
+
+
+def lookup_attention(B_H: int, S: int, T: int, Dh: int,
+                     mode_qk: FormatLike,
+                     mode_pv: Optional[FormatLike] = None, *,
+                     causal: bool = True,
+                     paged: bool = False) -> Optional[AttnBlockSizes]:
+    """Cached attention winner or None — never sweeps (serving-safe)."""
+    mode_pv = mode_pv if mode_pv is not None else mode_qk
+    entry = load_table().get(attention_table_key(
+        B_H, S, T, Dh, mode_qk, mode_pv, causal=causal, paged=paged))
+    if entry is None:
+        return None
+    bq, bkv = entry
+    return bq, bkv
+
+
 def clear_memory_cache() -> None:
     """Drop the in-process table cache (tests re-point the cache dir)."""
     _memory_table.clear()

@@ -42,10 +42,19 @@ def _limbs_of(x: Operand, n_limbs: int) -> jax.Array:
     return limbs_lib.decompose(x, n_limbs)
 
 
-def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype) -> jax.Array:
+def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype,
+                  dot=None) -> jax.Array:
     """Limb-product contraction from pre-extracted limb stacks (the shared
     core of :func:`mp_matmul_ref` and :func:`mp_fused_proj_ref` — the fused
-    variant extracts A's limbs ONCE and calls this per B operand)."""
+    variant extracts A's limbs ONCE and calls this per B operand).
+
+    ``dot`` is the f32-accumulating product for one limb pair (default:
+    standard matmul orientation); the attention helpers pass the
+    untransposed QK contraction so ONE implementation owns the
+    accumulation discipline every realization shares."""
+    if dot is None:
+        def dot(x, y):
+            return jnp.matmul(x, y, preferred_element_type=jnp.float32)
     if s.n_limbs <= 3:
         # separate limb-product matmuls, PLAIN adds between them.  Operands
         # stay unflattened — a (B·S, K) reshape merges sharded batch×seq dims
@@ -54,7 +63,7 @@ def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype) -> jax.Array:
         # compare/select) keep the products fusable/reassociable by XLA.
         out = None
         for (i, j) in s.products:  # descending order: small terms first
-            p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+            p = dot(al[i], bl[j])
             out = p if out is None else out + p
         return out.astype(out_dtype)
 
@@ -62,7 +71,7 @@ def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype) -> jax.Array:
     # (accuracy-critical; these modes are rare in production policies)
     by_order: dict[int, list[jax.Array]] = {}
     for (i, j) in s.products:
-        p = jnp.matmul(al[i], bl[j], preferred_element_type=jnp.float32)
+        p = dot(al[i], bl[j])
         by_order.setdefault(i + j, []).append(p)
 
     order_sums = []
@@ -251,6 +260,141 @@ def mp_wgrad_ref(
         a_sel, g_sel, ((lead_p, lead_p), ((), ())),
         preferred_element_type=jnp.float32)
     return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-precision attention: shared online-softmax core + ref oracle.
+#
+# The helpers below are pure jnp and are THE attention math for every
+# realization: the ref oracle loops them over (q, kv) blocks, and the Pallas
+# kernels (kernels/mp_attention.py) call the very same functions on VMEM
+# tiles — so ref, pallas_interpret, and pallas agree structurally (same limb
+# cascades, same order combine, same running-max/denominator updates), and
+# "chunked vs fused" differences reduce to float reassociation within the
+# format's error bound (DESIGN.md §4a).
+# ---------------------------------------------------------------------------
+ATTN_NEG_INF = -1e30
+
+
+def _dot_nt(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(..., M, D) x (..., T, D) -> (..., M, T): contract the trailing head
+    dim of two *untransposed* operands (matching leading dims are batch).
+    Lets the kernels feed (bq, Dh)/(bkv, Dh) VMEM tiles without a transpose."""
+    nb = a.ndim - 2
+    dn = (((a.ndim - 1,), (b.ndim - 1,)),
+          (tuple(range(nb)), tuple(range(nb))))
+    return jax.lax.dot_general(a, b, dn, preferred_element_type=jnp.float32)
+
+
+def attn_qk_logits(q: jax.Array, k: jax.Array, mode: FormatLike) -> jax.Array:
+    """Attention logits for one block pair at the QK format:
+    q (..., M, D) f32 (pre-scaled), k (..., T, D) f32 -> (..., M, T) f32.
+    The limb cascade runs on both operands (activations x activations —
+    unlike the dense layers there is no static weight side to pre-limb);
+    accumulation is :func:`_matmul_limbs`' own discipline, with the
+    untransposed contraction plugged in as the limb-pair product."""
+    s = resolve(mode)
+    al = limbs_lib.decompose(q, s.n_limbs)
+    bl = limbs_lib.decompose(k, s.n_limbs)
+    return _matmul_limbs(al, bl, s, jnp.float32, dot=_dot_nt)
+
+
+def attn_pv(p: jax.Array, v: jax.Array, mode: FormatLike) -> jax.Array:
+    """Probability-value contraction at the PV format:
+    p (..., M, T) f32, v (..., T, D) f32 -> (..., M, D) f32."""
+    s = resolve(mode)
+    al = limbs_lib.decompose(p, s.n_limbs)
+    bl = limbs_lib.decompose(v, s.n_limbs)
+    return _matmul_limbs(al, bl, s, jnp.float32)
+
+
+def online_softmax_update(m, d, acc, logits, v, mode_pv, *, p_mask=None):
+    """One kv-block step of the running (max, denom, accum) softmax.
+
+    m, d: (..., M); acc: (..., M, D); logits: (..., M, T_blk) f32 with
+    invalid positions already at ``ATTN_NEG_INF``; v: (..., T_blk, D).
+    ``p_mask`` (broadcastable to logits) re-zeroes probabilities explicitly —
+    required wherever a whole row of a block can be masked (a fully-masked
+    row has max == ATTN_NEG_INF, so exp(logit - max) == 1, not 0).
+    """
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    if p_mask is not None:
+        p = jnp.where(p_mask, p, 0.0)
+    alpha = jnp.exp(m - m_new)
+    d_new = d * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + attn_pv(p, v, mode_pv)
+    return m_new, d_new, acc_new
+
+
+def mp_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mode_qk: FormatLike = "M16",
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    block_q: Optional[int] = None,
+    block_kv: Optional[int] = None,
+    out_dtype: jnp.dtype = jnp.float32,
+) -> jax.Array:
+    """Fused multi-precision flash-attention oracle (pure jnp).
+
+    q: (B, S, H, Dh); k/v: (B, T, H, Dh) with H already GQA-repeated.
+    QK^T runs the limb cascade at ``mode_qk`` and P·V at ``mode_pv``
+    (defaults to ``mode_qk``) — the two op classes the policy resolves as
+    ``attn_qk`` / ``attn_pv``.  ``block_q``/``block_kv`` default to the full
+    sequence (the *unchunked* oracle); any blocking agrees with it within
+    the formats' error bounds because the per-block update is the exact
+    shared core the Pallas kernel runs.  ``q_offset`` shifts the causal
+    query positions (prefill at a nonzero cache offset).
+    """
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    fmt_pv = resolve(mode_pv if mode_pv is not None else mode_qk)
+    fmt_qk = resolve(mode_qk)
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dh))
+
+    bq = S if block_q is None else max(1, min(block_q, S))
+    bkv = T if block_kv is None else max(1, min(block_kv, T))
+    nq, nkv = -(-S // bq), -(-T // bkv)
+    S_pad, T_pad = nq * bq, nkv * bkv
+
+    # (B, S, H, Dh) -> (B, H, S, Dh), zero-padded to block multiples
+    qh = jnp.pad(q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale,
+                 [(0, 0), (0, 0), (0, S_pad - S), (0, 0)])
+    kh = jnp.pad(k.transpose(0, 2, 1, 3).astype(jnp.float32),
+                 [(0, 0), (0, 0), (0, T_pad - T), (0, 0)])
+    vh = jnp.pad(v.transpose(0, 2, 1, 3).astype(jnp.float32),
+                 [(0, 0), (0, 0), (0, T_pad - T), (0, 0)])
+
+    outs = []
+    for qi in range(nq):
+        q_blk = qh[:, :, qi * bq:(qi + 1) * bq]
+        q_pos = q_offset + qi * bq + jnp.arange(bq)
+        m = jnp.full((B, H, bq), ATTN_NEG_INF, jnp.float32)
+        d = jnp.zeros((B, H, bq), jnp.float32)
+        acc = jnp.zeros((B, H, bq, Dh), jnp.float32)
+        for ki in range(nkv):
+            if causal and ki * bkv > q_offset + (qi + 1) * bq - 1:
+                continue  # block entirely above the causal diagonal
+            k_blk = kh[:, :, ki * bkv:(ki + 1) * bkv]
+            v_blk = vh[:, :, ki * bkv:(ki + 1) * bkv]
+            k_pos = ki * bkv + jnp.arange(bkv)
+            valid = k_pos[None, :] < T
+            if causal:
+                valid = valid & (q_pos[:, None] >= k_pos[None, :])
+            logits = attn_qk_logits(q_blk, k_blk, fmt_qk)
+            logits = jnp.where(valid, logits, ATTN_NEG_INF)
+            m, d, acc = online_softmax_update(
+                m, d, acc, logits, v_blk, fmt_pv, p_mask=valid)
+        outs.append(acc / jnp.maximum(d[..., None], 1e-30))
+    out = jnp.concatenate(outs, axis=2)[:, :, :S]
+    return out.transpose(0, 2, 1, 3).astype(out_dtype)
 
 
 def naive_multipass_ref(

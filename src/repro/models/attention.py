@@ -1,9 +1,15 @@
-"""GQA / MHA attention: chunked flash-style training kernel (pure JAX, online
-softmax — memory O(q_chunk × kv_chunk) instead of O(S²)), KV-cache decode, and
-encoder (bidirectional) mode.
+"""GQA / MHA attention: fused multi-precision flash attention (Pallas kernel
+or blocked-jnp oracle via ``mp_attention``), the chunk-scan fallback (pure
+JAX, online softmax — memory O(q_chunk × kv_chunk) instead of O(S²)),
+KV-cache decode, and encoder (bidirectional) mode.
 
-All projections and both attention einsums run through mp_matmul, so the whole
-attention block obeys the run-time precision policy (paper modes per op class).
+All projections and both attention einsums run through the mp dispatch layer
+(``mp_qkv_proj`` / ``mp_attention`` / ``mp_matmul``), so the whole attention
+block obeys the run-time precision policy on every path — training prefill,
+dense decode, and paged scheduled decode included.  The attention
+contractions resolve the ``attn_qk`` (QK^T) and ``attn_pv`` (P·V) op
+classes, which alias to the legacy ``attn_logits`` / ``attn_out`` rules for
+pre-split policies (core/policy.py).
 """
 from __future__ import annotations
 
@@ -13,12 +19,19 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mpmatmul import mp_dense, mp_matmul, mp_qkv_proj
+from repro.core import dispatch as dispatch_lib
+from repro.core.formats import is_auto
+from repro.core.mpmatmul import mp_attention, mp_dense, mp_matmul, mp_qkv_proj
 from repro.core.policy import PrecisionPolicy
 from repro.models.layers import apply_rope, dense_init
 from repro.serve.kv_cache import PagedKVCache
 
 NEG_INF = -1e30
+
+# ceiling on the rematerialized probability matrix (B·H·S·T f32 elements)
+# the fused path's dense backward may form; longer sequences fall back to
+# the chunk-scan, whose scan-carried backward stays O(chunk²)
+FUSED_P_MAX_ELEMENTS = 1 << 24
 
 
 class KVCache(NamedTuple):
@@ -128,9 +141,10 @@ def chunked_attention(
         k = jnp.pad(k, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
 
-    mode_l = policy.mode("attn_logits")
-    mode_o = policy.mode("attn_out")
-    bwd = policy.bwd_kwargs("attn_logits")
+    mode_l = policy.mode("attn_qk")    # alias: attn_logits (core/policy.py)
+    mode_o = policy.mode("attn_pv")    # alias: attn_out
+    bwd = policy.bwd_kwargs("attn_qk")
+    bwd_o = policy.bwd_kwargs("attn_pv")
 
     # (B, S_pad, H, Dh) -> (nq, B, H, qc, Dh)
     qr = q.reshape(B, nq, qc, H, Dh).transpose(1, 0, 3, 2, 4) * scale
@@ -158,7 +172,7 @@ def chunked_attention(
             p = jnp.exp(logits - m_new[..., None])
             alpha = jnp.exp(m_run - m_new)
             d_new = d_run * alpha + jnp.sum(p, axis=-1)
-            pv = mp_matmul(p.astype(jnp.float32), v_blk, mode_o, **bwd)
+            pv = mp_matmul(p.astype(jnp.float32), v_blk, mode_o, **bwd_o)
             acc = acc * alpha[..., None] + pv
             return (m_new, d_new, acc), None
 
@@ -188,6 +202,46 @@ def chunked_attention(
     # (nq, B, H, qc, Dh) -> (B, S_pad, H, Dh); drop padded query rows
     out = out.transpose(1, 0, 3, 2, 4).reshape(B, S_pad, H, Dh)
     return out[:, :S] if S_pad != S else out
+
+
+def _self_attention(
+    q: jax.Array,            # (B, S, H, Dh), H already GQA-repeated
+    k: jax.Array,
+    v: jax.Array,
+    policy: PrecisionPolicy,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Route full self-attention: the fused flash path (``mp_attention`` —
+    QK^T and P·V at independently resolved formats, P never in HBM on the
+    Pallas backends) when eligible, else the chunk-scan.
+
+    Chunk-scan fallbacks: AUTO formats (per-op operand analysis needs the
+    per-chunk ``mp_matmul`` calls), active sharding rules (Ulysses /
+    sequence-parallel chunk layouts own the partitioning), and very long
+    sequences (the fused VJP rematerializes the (B, H, S, T) probability
+    matrix densely in the backward)."""
+    from repro.dist import sharding as _sh
+
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    fmt_qk = policy.mode("attn_qk")
+    fmt_pv = policy.mode("attn_pv")
+    if (is_auto(fmt_qk) or is_auto(fmt_pv)
+            or _sh.current_rules() is not None
+            or B * H * S * T > FUSED_P_MAX_ELEMENTS):
+        return chunked_attention(q, k, v, policy, causal=causal,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+    bwd_qk = policy.bwd_kwargs("attn_qk")
+    bwd_pv = policy.bwd_kwargs("attn_pv")
+    return mp_attention(
+        q, k, v, fmt_qk, fmt_pv, causal=causal,
+        dgrad_qk_mode=bwd_qk["dgrad_mode"],
+        wgrad_qk_mode=bwd_qk["wgrad_mode"],
+        dgrad_pv_mode=bwd_pv["dgrad_mode"],
+        wgrad_pv_mode=bwd_pv["wgrad_mode"])
 
 
 def gqa_forward(
@@ -240,8 +294,8 @@ def gqa_forward(
             # over the just-computed K/V — nothing to gather from the pool
             kk = _repeat_kv(k, h // hk)
             vv = _repeat_kv(v, h // hk)
-            out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
-                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+            out = _self_attention(q, kk, vv, policy, causal=dims.causal,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
     elif cache is not None:
         kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
                                                  cache.length, axis=1)
@@ -253,13 +307,13 @@ def gqa_forward(
         else:  # prefill into an empty cache: attend over the written prefix
             kk = _repeat_kv(k, h // hk)
             vv = _repeat_kv(v, h // hk)
-            out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
-                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+            out = _self_attention(q, kk, vv, policy, causal=dims.causal,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
     else:
         kk = _repeat_kv(k, h // hk)
         vv = _repeat_kv(v, h // hk)
-        out = chunked_attention(q, kk, vv, policy, causal=dims.causal,
-                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        out = _self_attention(q, kk, vv, policy, causal=dims.causal,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
 
     if S > 1:
         from repro.dist import sharding as _sh2
@@ -272,17 +326,21 @@ def gqa_forward(
 
 def _decode_attention(q, k_cache, v_cache, length, dims: AttnDims,
                       policy: PrecisionPolicy) -> jax.Array:
-    """One-token attention against the cache.  Written as plain einsums so
-    GSPMD can shard the cache sequence dim across the model axis and insert
-    the partial-softmax collectives automatically (sequence-parallel decode).
-    """
+    """One-token attention against the cache, masked by ``length`` (scalar
+    for the dense cache, (B,) per-slot for a paged micro-batch).
+
+    Both einsums route through ``mp_matmul`` at the policy-resolved
+    ``attn_qk`` / ``attn_pv`` formats (core/dispatch.py
+    ``masked_decode_attention``), so decode obeys the precision policy on
+    every backend — and the contractions stay plain batched matmuls on the
+    ref/sharded backends, so GSPMD can still shard the cache sequence dim
+    across the model axis and insert the partial-softmax collectives
+    automatically (sequence-parallel decode)."""
     from repro.dist import sharding as _sh
 
     B, S1, h, dh = q.shape  # S1 == 1
     hk = dims.n_kv_heads
     n_rep = h // hk
-    scale = 1.0 / jnp.sqrt(dh)
-    T = k_cache.shape[1]
 
     rules = _sh.current_rules()
     if rules is not None:
@@ -295,14 +353,8 @@ def _decode_attention(q, k_cache, v_cache, length, dims: AttnDims,
 
     kk = _repeat_kv(k_cache.astype(jnp.float32), n_rep)  # (B, T, H, Dh)
     vv = _repeat_kv(v_cache.astype(jnp.float32), n_rep)
-    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kk) * scale
-    # length: scalar (dense cache) or (B,) per-slot (paged micro-batch)
-    ln = length.reshape(-1, 1, 1, 1) if getattr(length, "ndim", 0) else length
-    mask = (jnp.arange(T)[None, None, None, :] < ln)
-    logits = jnp.where(mask, logits, NEG_INF)
-    p = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhst,bthd->bshd", p, vv)
-    return out.astype(q.dtype)
+    return dispatch_lib.masked_decode_attention(
+        q, kk, vv, length, policy.mode("attn_qk"), policy.mode("attn_pv"))
 
 
 def _paged_write(cache: PagedKVCache, k: jax.Array, v: jax.Array,
@@ -339,19 +391,18 @@ def _paged_write(cache: PagedKVCache, k: jax.Array, v: jax.Array,
 def _paged_decode_attention(q: jax.Array, cache: PagedKVCache,
                             dims: AttnDims, policy: PrecisionPolicy
                             ) -> jax.Array:
-    """One-token attention against the paged pool: gather each slot's blocks
-    into a contiguous (B, max_blocks·bs) view, then run the standard masked
-    decode attention with the per-slot lengths.  Trash-table entries gather
-    garbage that sits past every slot's length and is masked off."""
-    B = q.shape[0]
-    bs = cache.block_size
-    max_blocks = cache.block_table.shape[1]
-    kk = cache.k[cache.block_table]          # (B, max_blocks, bs, Hkv, Dh)
-    vv = cache.v[cache.block_table]
-    hk, dh = kk.shape[-2], kk.shape[-1]
-    kk = kk.reshape(B, max_blocks * bs, hk, dh)
-    vv = vv.reshape(B, max_blocks * bs, hk, dh)
-    return _decode_attention(q, kk, vv, cache.length, dims, policy)
+    """One-token attention against the paged pool, via the dispatch layer.
+
+    Pallas backends run the paged flash kernel: K/V blocks are DMA'd
+    straight through the scalar-prefetched block table with per-slot length
+    masking — the contiguous ``pool[table]`` gather never materializes.
+    Other backends gather the table's columns — bounded, because the
+    scheduler slices each bucket's table to its used-block count
+    (serve/scheduler.py) instead of all ``max_blocks`` trash-padded columns
+    — and run the policy-obeying masked einsums."""
+    return dispatch_lib.dispatch_paged_attention(
+        q, cache.k, cache.v, cache.block_table, cache.length,
+        policy.mode("attn_qk"), policy.mode("attn_pv"))
 
 
 def make_kv_cache(batch: int, max_seq: int, dims: AttnDims,

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.mpmatmul import mp_dense, mp_fused_proj
 from repro.core.policy import PrecisionPolicy
-from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.attention import NEG_INF, _self_attention
 from repro.models.layers import apply_rope, dense_init
 
 
@@ -139,8 +139,8 @@ def mla_forward(
     # both (values ignore the pad after the contraction)
     pad = dims.qk_head_dim - dims.v_head_dim
     v_p = jnp.pad(v, [(0, 0), (0, 0), (0, 0), (0, pad)]) if pad > 0 else v
-    out = chunked_attention(q, k, v_p, policy, causal=True,
-                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = _self_attention(q, k, v_p, policy, causal=True,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk)
     out = out[..., : dims.v_head_dim]
     if S > 1:
         from repro.dist import sharding as _sh

@@ -54,6 +54,7 @@ from repro.core.policy import OpRule, PrecisionPolicy, get_policy  # noqa: F401
 from repro.core.limbs import PrelimbedWeight, prelimb_weight  # noqa: F401
 from repro.core.mpmatmul import (  # noqa: F401
     mode_flops,
+    mp_attention,
     mp_dense,
     mp_einsum_qk,
     mp_fused_proj,

@@ -182,6 +182,18 @@ class ContinuousScheduler:
             admitted += 1
         return admitted
 
+    def _table_width(self, reqs) -> int:
+        """Bounded paged reads: the block table handed to a jit step is
+        sliced to the bucket's maximum *used* block count (pow2-bucketed so
+        the trace count stays O(log max_blocks_per_seq)) instead of all
+        ``max_blocks_per_seq`` trash-padded columns — the fallback gather
+        copies W·bs tokens per slot per step, and the paged kernel runs W
+        grid columns, so trash padding is pure waste.  Positions past the
+        sliced width still redirect to the trash block on write
+        (models/attention._paged_write clamps against the table width)."""
+        used = max(len(r.blocks) for r in reqs)
+        return min(_pow2_at_least(used), self.pool.max_blocks_per_seq)
+
     def _prefill(self, req: ScheduledRequest) -> None:
         policy = self._resolve(req)
         prefill_fn, _ = self.engine.paged_steps_for(policy)
@@ -189,7 +201,7 @@ class ContinuousScheduler:
         s_pad = _pow2_at_least(n)
         tokens = np.zeros((1, s_pad), np.int32)
         tokens[0, :n] = req.prompt
-        table = self.pool.table_row(req.blocks)[None, :]
+        table = self.pool.table_row(req.blocks)[None, :self._table_width([req])]
         lengths = np.zeros((1,), np.int32)
         logits, new_k, new_v = prefill_fn(
             self.engine.params, self.pool.k, self.pool.v,
@@ -238,9 +250,10 @@ class ContinuousScheduler:
         buckets = self._decode_buckets()
         for policy, reqs in buckets:
             mb = min(_pow2_at_least(len(reqs)), self.max_slots)
+            w = self._table_width(reqs)
             table = np.stack(
                 [self.pool.table_row(r.blocks) for r in reqs]
-                + [self.pool.trash_row()] * (mb - len(reqs)))
+                + [self.pool.trash_row()] * (mb - len(reqs)))[:, :w]
             lengths = np.asarray([r.length for r in reqs]
                                  + [0] * (mb - len(reqs)), np.int32)
             tokens = np.asarray([[r.next_token] for r in reqs]
