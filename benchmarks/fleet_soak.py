@@ -1,0 +1,224 @@
+"""Fleet serving soak + scaling benchmark (CPU ref backend; relative numbers).
+
+Two questions, one workload (a four-mode Poisson request stream — M8 / M16 /
+M23 / M36, four of the paper's six modes, decode-heavy):
+
+  * **scaling** — aggregate tokens/s at 1, 2, and 4 cells under the
+    ``mode_affinity`` router.  One interleaved cell decodes a four-mode
+    batch as up to four policy buckets per tick — four jit launches, each a
+    sliver of the batch — while mode-pinned cells decode full single-mode
+    buckets: the same tokens in ~¼ the launches.  Fewer launches per token
+    is a *serial* win (no thread-level parallelism is assumed — every cell
+    steps on the same core), so the measured ratio is the per-launch
+    fixed-cost amortization alone and only grows when cells get their own
+    devices.  ``--min-scaling`` gates the median 1 -> 4 cell ratio over
+    ``--reps`` runs in CI.
+  * **interference** — pooled per-token inter-token-latency p95 for the
+    interleaved single-engine scheduler (greedy admission: an eviction
+    burst runs several B=1 prefills back to back inside one decode gap) vs
+    one disaggregated cell (prefill paced to 1/tick).  Disaggregation
+    bounds how much prefill work any decode gap can absorb, which is
+    exactly what the ITL tail measures.
+
+Handoff parity rides along: the disaggregated fleet must produce
+bit-identical token streams to the single-engine scheduler on the same
+trace (asserted every run).
+
+    PYTHONPATH=src python -m benchmarks.fleet_soak --json-out BENCH_fleet.json
+    PYTHONPATH=src python -m benchmarks.fleet_soak --soak   # CI invariants
+
+All jit traces are warmed before any timed run (every cell shares ONE
+ServeEngine, so warm traces are warm fleet-wide).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks.serve_scheduler import build_requests
+from repro.configs.registry import get_config
+from repro.core.policy import PrecisionPolicy
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+from repro.serve.fleet import FleetRouter, make_fleet
+from repro.serve.scheduler import ContinuousScheduler
+
+FLEET_MODES = ("M8", "M16", "M23", "M36")
+
+
+def _pool_blocks(args, slots: int) -> int:
+    """Blocks for ``slots`` concurrent worst-case requests (+1 for trash)."""
+    per_req = -(-(args.prompt_hi + args.max_new_hi) // args.block_size) + 1
+    return 1 + slots * per_req
+
+
+def _trace(args, n=None):
+    return build_requests(args.seed, n or args.requests, args._vocab,
+                          max_new_hi=args.max_new_hi,
+                          max_new_lo=args.max_new_lo, rate=args.rate,
+                          modes=FLEET_MODES, prompt_hi=args.prompt_hi)
+
+
+def run_fleet(eng, reqs, *, n_cells: int, policy: str, disaggregate: bool,
+              n_blocks: int, block_size: int) -> dict:
+    cells = make_fleet(eng, n_cells, n_blocks=n_blocks,
+                       block_size=block_size, disaggregate=disaggregate)
+    router = FleetRouter(cells, policy=policy)
+    t0 = time.perf_counter()
+    done = router.run(reqs)
+    dt = time.perf_counter() - t0
+    stats = router.stats()
+    return {"seconds": dt, "tokens_per_s": stats["useful_tokens"] / dt,
+            "stats": stats, "router": router,
+            "outs": {r.rid: r.out for r in done}}
+
+
+def run_single(eng, reqs, *, n_blocks: int, block_size: int) -> dict:
+    sched = ContinuousScheduler(eng, n_blocks=n_blocks,
+                                block_size=block_size)
+    t0 = time.perf_counter()
+    done = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    stats = sched.stats()
+    return {"seconds": dt, "tokens_per_s": stats["useful_tokens"] / dt,
+            "stats": stats, "outs": {r.rid: r.out for r in done}}
+
+
+def bench(args) -> dict:
+    cfg = get_config(args.arch, smoke=True)
+    args._vocab = cfg.vocab
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=args.slots,
+                      max_seq=args.max_seq,
+                      policy=PrecisionPolicy.serve_default())
+    blocks = _pool_blocks(args, args.slots)
+    kw = dict(n_blocks=blocks, block_size=args.block_size)
+
+    # warm every trace each timed structure will touch
+    for n in (1, 2, 4):
+        run_fleet(eng, _trace(args), n_cells=n, policy="mode_affinity",
+                  disaggregate=False, **kw)
+    run_fleet(eng, _trace(args), n_cells=1, policy="round_robin",
+              disaggregate=True, **kw)
+    run_single(eng, _trace(args), **kw)
+
+    # --- scaling: median aggregate tokens/s vs cell count ------------------
+    tps = {1: [], 2: [], 4: []}
+    for _ in range(args.reps):
+        for n in (1, 2, 4):
+            r = run_fleet(eng, _trace(args), n_cells=n,
+                          policy="mode_affinity", disaggregate=False, **kw)
+            tps[n].append(r["tokens_per_s"])
+    med = {n: sorted(v)[len(v) // 2] for n, v in tps.items()}
+    ratio = med[4] / med[1]
+
+    # --- interference: interleaved single engine vs disaggregated cell ----
+    inter = run_single(eng, _trace(args), **kw)
+    disagg = run_fleet(eng, _trace(args), n_cells=1, policy="round_robin",
+                       disaggregate=True, **kw)
+    # handoff parity rides along: same trace, same tokens, both paths
+    assert disagg["outs"] == inter["outs"], \
+        "fleet tokens diverge from single-engine scheduler"
+
+    result = {
+        "arch": cfg.name, "requests": args.requests, "slots": args.slots,
+        "rate": args.rate, "modes": list(FLEET_MODES),
+        "block_size": args.block_size, "n_blocks_per_cell": blocks,
+        "reps": args.reps,
+        "tokens_per_s": {str(n): round(v, 1) for n, v in med.items()},
+        "scaling_1_to_4": round(ratio, 3),
+        "scaling_1_to_2": round(med[2] / med[1], 3),
+        "interleaved_itl_p95_ms": inter["stats"]["itl_p95_ms"],
+        "disaggregated_itl_p95_ms": disagg["stats"]["itl_p95_ms"],
+        "interleaved_ttft_p95_ms": inter["stats"]["ttft_p95_ms"],
+        "disaggregated_ttft_p95_ms": disagg["stats"]["ttft_p95_ms"],
+        "handoff_parity": True,
+        "backend": "ref", "device": jax.default_backend(),
+    }
+    print(json.dumps(result, indent=1))
+    return result
+
+
+def soak(args) -> None:
+    """CI soak: the four-mode Poisson stream through 2- and 4-cell fleets
+    with deliberately tight pools (admission must wait on eviction reclaim,
+    and handoffs must spill across cells) — asserts the fleet-wide
+    invariants: every request completes with its full budget, no slot/block
+    leak in any cell, no parked handoffs, monotone completions."""
+    cfg = get_config(args.arch, smoke=True)
+    args._vocab = cfg.vocab
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=args.slots,
+                      max_seq=args.max_seq,
+                      policy=PrecisionPolicy.serve_default())
+    for n_cells in (2, 4):
+        # tight: each cell can hold ~slots/2 worst-case requests
+        blocks = _pool_blocks(args, max(2, args.slots // 2))
+        r = run_fleet(eng, _trace(args, n=64), n_cells=n_cells,
+                      policy="least_kv", disaggregate=True,
+                      n_blocks=blocks, block_size=args.block_size)
+        router, stats = r["router"], r["stats"]
+        assert stats["completed"] == 64, \
+            f"lost requests: {stats['completed']}/64"
+        assert stats["blocks_live"] == 0, \
+            f"block leak: {stats['blocks_live']} live"
+        assert stats["pending_handoffs"] == 0, "handoff leak"
+        for cell in router.cells:
+            assert cell.decode.n_active == 0, f"slot leak in {cell.cell_id}"
+            assert cell.prefill.queue_depth == 0, "prefill queue leak"
+            assert cell.pool.n_free == cell.pool.n_blocks - 1, \
+                "free-list leak"
+        done_steps = [q.done_step for q in router.completed]
+        assert done_steps == sorted(done_steps), "completions not monotone"
+        for q in router.completed:
+            assert len(q.out) == q.max_new, (q.rid, len(q.out), q.max_new)
+        print(f"soak OK: {n_cells} cells, 64 requests, "
+              f"{stats['steps']} decode steps, "
+              f"{stats['requeues']} requeues, "
+              f"occupancy {stats['slot_occupancy']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-mpfp-100m")
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots per cell (and single-engine batch)")
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new-lo", type=int, default=20)
+    ap.add_argument("--max-new-hi", type=int, default=28)
+    ap.add_argument("--prompt-hi", type=int, default=8,
+                    help="prompt length upper bound (short prompts keep the "
+                         "workload decode-heavy)")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="mean arrivals per decode step (heavy traffic "
+                         "keeps every cell's admission queue non-empty)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="timed repetitions per cell count; the scaling "
+                         "gate uses the median (damps CI wall-clock noise)")
+    ap.add_argument("--json-out", default="")
+    ap.add_argument("--soak", action="store_true")
+    ap.add_argument("--min-scaling", type=float, default=0.0,
+                    help="fail unless the median 4-cell/1-cell aggregate "
+                         "tokens-per-s ratio reaches this (CI gate; "
+                         "0 = record only)")
+    args = ap.parse_args()
+    if args.soak:
+        soak(args)
+        return
+    result = bench(args)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(result, f, indent=1)
+    if args.min_scaling and result["scaling_1_to_4"] < args.min_scaling:
+        raise SystemExit(
+            f"fleet scaling {result['scaling_1_to_4']} < {args.min_scaling}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,22 +31,28 @@ from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
 
 
 def build_requests(seed: int, n: int, vocab: int, *, max_new_hi: int = 24,
-                   rate: float = 1.5, mixed_modes: bool = False):
+                   max_new_lo: int = 2, rate: float = 1.5,
+                   mixed_modes: bool = False, modes=None,
+                   prompt_hi: int = 20):
     """Deterministic mixed-length Poisson request trace (fresh runtime state
     every call, so one trace can drive warmup + timed runs + both paths).
     ``rate`` is mean arrivals per decode step — heavy-traffic serving keeps
     the admission queue non-empty, which is the regime the scheduler (and
-    the ROADMAP's "heavy traffic" north star) targets."""
+    the ROADMAP's "heavy traffic" north star) targets.  ``modes`` overrides
+    the per-request QoS rotation (the fleet soak rotates four paper modes;
+    ``mixed_modes`` keeps this bench's original three)."""
     rng = np.random.default_rng(seed)
-    modes = ("M8", "M16", "M23") if mixed_modes else (None,)
+    if modes is None:
+        modes = ("M8", "M16", "M23") if mixed_modes else (None,)
     t, reqs = 0, []
     for i in range(n):
         t += int(rng.poisson(1.0 / rate))
         reqs.append(ScheduledRequest(
             rid=i,
-            prompt=rng.integers(0, vocab, size=int(rng.integers(2, 21))
+            prompt=rng.integers(0, vocab,
+                                size=int(rng.integers(2, prompt_hi + 1))
                                 ).astype(np.int32),
-            max_new=int(rng.integers(2, max_new_hi + 1)),
+            max_new=int(rng.integers(max_new_lo, max_new_hi + 1)),
             mode=modes[i % len(modes)],
             arrival=t))
     return reqs
@@ -83,6 +89,8 @@ def run_scheduled(eng: ServeEngine, reqs, *, n_blocks: int,
             "tokens_per_s": stats["useful_tokens"] / dt,
             "steps": stats["steps"],
             "slot_occupancy": stats["slot_occupancy"],
+            "latency": {k: v for k, v in stats.items()
+                        if "_p50_" in k or "_p95_" in k},
             "outs": {r.rid: r.out for r in done}}
 
 
@@ -114,6 +122,10 @@ def bench(args) -> dict:
         "scheduled_slot_occupancy": sched["slot_occupancy"],
         "static_seconds": round(static["seconds"], 3),
         "scheduled_seconds": round(sched["seconds"], 3),
+        # per-request latency percentiles (TTFT/TPOT/ITL ms, queue-wait in
+        # virtual steps) — the router-balancing metrics the fleet soak
+        # compares against
+        **{f"scheduled_{k}": v for k, v in sched["latency"].items()},
         "backend": "ref", "device": jax.default_backend(),
     }
     print(json.dumps(result, indent=1))

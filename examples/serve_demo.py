@@ -57,6 +57,29 @@ def main():
               f"admit@{r.admitted_step} done@{r.done_step}: {r.out}")
     print(f"  {sched.stats()}")
 
+    # fleet serving: the same requests over two engine replicas — prefill
+    # engines hand paged KV blocks to decode engines (no recompute), the
+    # router pins each mode to a home cell, and finished requests fan back
+    # out to their submitter's completion queue
+    from repro.serve.fleet import FleetRouter, make_fleet
+
+    cells = make_fleet(eng, 2, n_blocks=32, block_size=8)
+    router = FleetRouter(cells, policy="mode_affinity")
+    router.run([
+        ScheduledRequest(rid=0, prompt=prompts[0], max_new=6, mode="M8",
+                         submitter="alice"),
+        ScheduledRequest(rid=1, prompt=prompts[1], max_new=6, mode="M23",
+                         submitter="bob"),
+        ScheduledRequest(rid=2, prompt=prompts[2], max_new=4, arrival=2,
+                         submitter="alice"),
+    ])
+    print("fleet router (2 cells, mode_affinity):")
+    for who in ("alice", "bob"):
+        for r in router.drain(who):
+            print(f"  {who}: req{r.rid} [{r.mode or 'engine-default'}] "
+                  f"cell{r.engine_id}: {r.out}")
+    print(f"  {router.stats()}")
+
 
 if __name__ == "__main__":
     main()

@@ -383,11 +383,12 @@ def dispatch_attention(
     with H already GQA-repeated) to a backend.
 
     pallas / pallas_interpret run the flash kernel (kernels/mp_attention.py,
-    block sizes from the autotune table); every other backend — ref, sharded
-    (attention is batch-local: K-sharding the head-dim contraction cannot
-    help, and GSPMD shards the batch/head dims of plain jnp ops), and
-    registered extension backends (which only advertise the binary matmul
-    contract) — runs the blocked jnp oracle, which shares the kernel's
+    block sizes from the autotune table).  sharded runs decode shapes
+    (S == 1) sequence-parallel over the cache dim
+    (dist/attention.sp_decode_attention); its prefill/training shapes — and
+    every other backend: ref (K-sharding the head-dim contraction cannot
+    help) and registered extension backends (which only advertise the binary
+    matmul contract) — run the blocked jnp oracle, which shares the kernel's
     online-softmax core.  Sequence-parallel *training* shapes never reach
     this route: models/attention.py keeps them on the chunk-scan path."""
     name = backend or context_lib.current_context().backend
@@ -408,6 +409,22 @@ def dispatch_attention(
             block_q=bq, block_kv=bkv)
     if name not in _REGISTRY:
         raise ValueError(f"unknown backend {name!r}; have {available_backends()}")
+    if name == "sharded" and q.shape[1] == 1 \
+            and not (is_auto(fmt_qk) or is_auto(fmt_pv)) \
+            and not _bound_axis_names():
+        from repro.dist import attention as dist_attn  # lazy: imports us back
+
+        # decode shape (S == 1): one query row against the cache prefix is
+        # exactly the sequence-parallel decode contraction — a causal step
+        # at q_offset sees positions [0, q_offset], a non-causal probe sees
+        # all T.  (Prefill/training shapes stay on the oracle below:
+        # models/attention.py keeps sequence-parallel training on the
+        # chunk-scan path.)
+        T = k.shape[1]
+        ln = min(q_offset + 1, T) if causal else T
+        out = dist_attn.sp_decode_attention(
+            q, k, v, jnp.int32(ln), fmt_qk, fmt_pv, scale=scale)
+        return out.astype(out_dtype)
     return ref_backend.mp_attention_ref(
         q, k, v, fmt_qk, fmt_pv, causal=causal, scale=scale,
         q_offset=q_offset, block_q=block_q, block_kv=block_kv,
@@ -433,11 +450,27 @@ def masked_decode_attention(
     every backend; the ops stay plain batched matmuls, so GSPMD can still
     shard the cache sequence dim (sequence-parallel decode) exactly like the
     v1 einsums.  q is scaled *before* the contraction so the limb cascade
-    decomposes the same operand the fused kernels do."""
+    decomposes the same operand the fused kernels do.
+
+    The sharded backend gets a real multi-device realization: the cache
+    sequence dim is the contraction of both einsums, so K-sharding them
+    *jointly* — sequence-parallel decode with an online-softmax combine
+    (dist/attention.py) — is the layout that helps; sharding each einsum
+    independently cannot (the softmax between them needs full rows)."""
     from repro.core.mpmatmul import (  # lazy: mpmatmul imports us
         mp_einsum_qk,
         mp_matmul,
     )
+
+    name = backend or context_lib.current_context().backend
+    if name == "sharded" and not _bound_axis_names() \
+            and not (is_auto(mode_qk)
+                     or is_auto(mode_pv if mode_pv is not None else mode_qk)):
+        from repro.dist import attention as dist_attn  # lazy: imports us back
+
+        # falls back to this function (backend="ref") on a 1-device mesh
+        return dist_attn.sp_decode_attention(
+            q, k, v, lengths, mode_qk, mode_pv, scale=scale)
 
     B, S1, H, Dh = q.shape
     T = k.shape[1]
@@ -480,11 +513,13 @@ def dispatch_paged_attention(
     pallas / pallas_interpret run the paged flash kernel — K/V blocks are
     DMA'd through the scalar-prefetched block table, so the contiguous
     ``pool[table]`` gather never materializes in HBM.  Every other backend
-    (ref, sharded/seq-parallel decode, extension backends) falls back to the
-    gather + policy-obeying einsum path; the gather is bounded by the table
-    width the scheduler passes (sliced to the bucket's used-block count).
-    AUTO formats analyze raw operand values, so they always take the einsum
-    fallback."""
+    falls back to the gather + policy-obeying einsum path (the gather is
+    bounded by the table width the scheduler passes, sliced to the bucket's
+    used-block count); under the sharded backend that einsum path runs
+    sequence-parallel across the mesh (masked_decode_attention routes to
+    dist/attention.sp_decode_attention), so a fleet decode engine can span
+    devices.  AUTO formats analyze raw operand values, so they always take
+    the single-device einsum fallback."""
     name = backend or context_lib.current_context().backend
     B, S1, H, Dh = q.shape
     n_blocks, bs, hk, _ = k_pool.shape

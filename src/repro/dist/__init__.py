@@ -1,3 +1,6 @@
 """Distribution layer: sharding rules, explicit collectives, pipeline
-parallelism.  See DESIGN.md §5 for how these compose with the mp_matmul
-dispatch layer."""
+parallelism, and sequence-parallel decode attention
+(:mod:`repro.dist.attention` — the sharded backend's multi-device decode
+path).  See DESIGN.md §5 for how these compose with the mp_matmul dispatch
+layer and §9 for how a fleet decode engine uses the sequence-parallel path.
+"""

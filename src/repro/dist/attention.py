@@ -1,0 +1,137 @@
+"""Sequence-parallel decode attention — the sharded backend's decode path.
+
+Decode attention is one query position against a long KV prefix, so the only
+dimension worth sharding is the cache sequence (T): each device holds a
+contiguous T-slice of K/V, computes its local policy-obeying logits and
+partial softmax statistics, and three collectives combine them exactly —
+
+    pmax  of the local row maxima      -> the global softmax max,
+    psum  of the local exp-sum         -> the global denominator,
+    psum  of the local P@V partial     -> the global numerator,
+
+the distributed form of the online-softmax identity the flash kernels use
+(kernels/ref.online_softmax_update): softmax(concat(l_i)) @ concat(v_i) ==
+sum_i exp(l_i - m) @ v_i / sum_i sum(exp(l_i - m)).  Both contractions run
+through the limb cascade at the resolved ``attn_qk`` / ``attn_pv`` formats
+(ref.attn_qk_logits / ref.attn_pv), so the multi-device path keeps the same
+precision-policy obedience as the single-device einsum path — this is what
+lets a fleet decode engine span devices (DESIGN.md §9) instead of dropping
+the sharded backend to single-device compute.
+
+Masking discipline matches :func:`repro.core.dispatch.masked_decode_attention`
+exactly: positions ``>= lengths`` are forced to ``ATTN_NEG_INF`` before the
+max and their probabilities re-zeroed after the exp, so zero-padded shards
+contribute nothing and fully-masked rows (length-0 inactive slots) flush
+exact zeros rather than a mean over trash.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import context as context_lib
+from repro.core.formats import FormatLike, is_auto, resolve
+from repro.kernels import ref as ref_backend
+
+
+def _usable_mesh(mesh, axis: str):
+    """Resolve (mesh, axis) the same way the sharded matmul backend does:
+    explicit arg, else context, else the default 1-D matmul mesh; a 1-D mesh
+    under any name counts.  Returns None when sequence-parallelism cannot
+    run (no multi-device mesh, or already inside a shard_map scope)."""
+    from repro.core.dispatch import _bound_axis_names
+
+    if _bound_axis_names():
+        return None
+    if mesh is None:
+        mesh = context_lib.current_context().mesh
+    if mesh is None:
+        from repro.launch import mesh as mesh_lib  # deferred: device init
+
+        mesh = mesh_lib.make_matmul_mesh(axis=axis)
+    if axis not in mesh.shape:
+        if len(mesh.shape) != 1:
+            return None
+        axis = next(iter(mesh.shape))
+    if mesh.shape[axis] == 1:
+        return None
+    return mesh, axis
+
+
+def sp_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths,
+    mode_qk: FormatLike,
+    mode_pv: Optional[FormatLike] = None,
+    *,
+    scale: Optional[float] = None,
+    mesh=None,
+    axis: str = "data",
+) -> jax.Array:
+    """Sequence-parallel masked decode attention: q (B, 1, H, Dh) against
+    k/v (B, T, H, Dh) (H already GQA-repeated), valid prefix per slot given
+    by ``lengths`` (scalar or (B,)).  K/V are sharded on T across the mesh
+    axis; the result is numerically the sequence-parallel regrouping of
+    :func:`~repro.core.dispatch.masked_decode_attention` (same masking, same
+    per-format contractions, reassociated accumulation).
+
+    AUTO formats need whole-operand value analysis, and a 1-device mesh has
+    nothing to shard — both fall back to the single-device einsum path.
+    """
+    mode_pv = mode_pv if mode_pv is not None else mode_qk
+    resolved = _usable_mesh(mesh, axis)
+    if resolved is None or is_auto(mode_qk) or is_auto(mode_pv):
+        from repro.core.dispatch import masked_decode_attention
+
+        return masked_decode_attention(q, k, v, lengths, mode_qk, mode_pv,
+                                       scale=scale, backend="ref")
+    mesh, axis = resolved
+    fmt_qk, fmt_pv = resolve(mode_qk), resolve(mode_pv)
+    B, S1, H, Dh = q.shape
+    if S1 != 1:
+        raise ValueError(f"decode attention expects S == 1, got {S1}")
+    T = k.shape[1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dh))
+    n = mesh.shape[axis]
+    pad = (-T) % n
+    if pad:
+        # zero T-padding is exact: padded positions sit past every slot's
+        # length, so the position mask sends their logits to ATTN_NEG_INF
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    t_loc = (T + pad) // n
+    ln = jnp.asarray(lengths, jnp.int32).reshape(-1)
+    if ln.shape[0] == 1 and B > 1:
+        ln = jnp.broadcast_to(ln, (B,))
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale  # (B, H, 1, Dh)
+
+    def local(qh_rep, k_loc, v_loc, ln_rep):
+        kh = k_loc.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B, H, t, Dh)
+        vh = v_loc.transpose(0, 2, 1, 3).astype(jnp.float32)
+        logits = ref_backend.attn_qk_logits(qh_rep, kh, fmt_qk)
+        pos = jax.lax.axis_index(axis) * t_loc + jnp.arange(t_loc)
+        mask = pos[None, None, None, :] < ln_rep.reshape(-1, 1, 1, 1)
+        logits = jnp.where(mask, logits, ref_backend.ATTN_NEG_INF)
+        m = jax.lax.pmax(jnp.max(logits, axis=-1, keepdims=True), axis)
+        # exp(NEG_INF - NEG_INF) == 1 on fully-masked rows: the explicit
+        # re-zero (not underflow) is what guarantees exact-0 outputs there
+        p = jnp.where(mask, jnp.exp(logits - m), 0.0)
+        denom = jax.lax.psum(jnp.sum(p, axis=-1, keepdims=True), axis)
+        acc = jax.lax.psum(ref_backend.attn_pv(p, vh, fmt_pv), axis)
+        return acc / jnp.maximum(denom, 1e-30)
+
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None),
+                  P(None, axis, None, None), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(qh, k, v, ln)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, 1, H, Dh)

@@ -10,6 +10,13 @@ precision modes — the paper's mode table as per-request QoS):
 
     PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
         --smoke --scheduler --requests 12 --mixed-modes
+
+Fleet path (N engine replicas behind the mode-aware router, disaggregated
+prefill/decode with paged-KV handoff — serve/fleet/):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
+        --smoke --engines 4 --disaggregate --router-policy mode_affinity \
+        --requests 16 --mixed-modes
 """
 import argparse
 
@@ -48,6 +55,17 @@ def main():
                          "(0 = sized from --requests)")
     ap.add_argument("--kv-block-size", type=int, default=16,
                     help="scheduler only: tokens per KV block")
+    ap.add_argument("--engines", type=int, default=0,
+                    help="fleet mode: number of engine cells behind the "
+                         "router (0 = no fleet; implies the request-stream "
+                         "driver)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="fleet only: pace prefill (1/cell/tick) so decode "
+                         "ticks never starve behind a prefill burst; "
+                         "default is interleaved (greedy prefill)")
+    ap.add_argument("--router-policy", default="round_robin",
+                    choices=("round_robin", "least_kv", "mode_affinity"),
+                    help="fleet only: cell placement policy")
     args = ap.parse_args()
 
     if args.backend:
@@ -64,6 +82,9 @@ def main():
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
+    if args.engines:
+        _run_fleet(cfg, params, args, rng)
+        return
     if args.scheduler:
         _run_scheduler(cfg, params, args, rng)
         return
@@ -79,19 +100,10 @@ def main():
     print(eng.decode_throughput_probe())
 
 
-def _run_scheduler(cfg, params, args, rng):
-    """Request-stream driver: Poisson arrivals through the continuous
-    scheduler, each request optionally carrying its own precision mode."""
-    from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
+def _build_stream(cfg, args, rng):
+    """Poisson arrival trace shared by the scheduler and fleet drivers."""
+    from repro.serve.primitives import ScheduledRequest
 
-    slots = min(args.requests, 8)
-    eng = ServeEngine(cfg, params, max_batch=slots, max_seq=args.max_seq,
-                      policy=get_policy(args.policy))
-    block_size = args.kv_block_size
-    n_blocks = args.kv_blocks or (
-        1 + slots * 2 * max(1, -(-(args.max_seq) // block_size)))
-    sched = ContinuousScheduler(eng, n_blocks=n_blocks,
-                                block_size=block_size)
     modes = ("M8", "M16", "M23") if args.mixed_modes else (None,)
     t = 0
     reqs = []
@@ -105,12 +117,53 @@ def _run_scheduler(cfg, params, args, rng):
             max_new=int(rng.integers(2, args.max_new + 1)),
             mode=modes[i % len(modes)],
             arrival=t))
-    done = sched.run(reqs)
+    return reqs
+
+
+def _run_scheduler(cfg, params, args, rng):
+    """Request-stream driver: Poisson arrivals through the continuous
+    scheduler, each request optionally carrying its own precision mode."""
+    from repro.serve.scheduler import ContinuousScheduler
+
+    slots = min(args.requests, 8)
+    eng = ServeEngine(cfg, params, max_batch=slots, max_seq=args.max_seq,
+                      policy=get_policy(args.policy))
+    block_size = args.kv_block_size
+    n_blocks = args.kv_blocks or (
+        1 + slots * 2 * max(1, -(-(args.max_seq) // block_size)))
+    sched = ContinuousScheduler(eng, n_blocks=n_blocks,
+                                block_size=block_size)
+    done = sched.run(_build_stream(cfg, args, rng))
     for r in sorted(done, key=lambda r: r.rid):
         qos = r.mode or "engine-default"
         print(f"req{r.rid} [{qos}] arrive@{r.arrival} "
               f"admit@{r.admitted_step} done@{r.done_step}: {r.out}")
     print(sched.stats())
+
+
+def _run_fleet(cfg, params, args, rng):
+    """Fleet driver: the same Poisson stream routed over --engines cells
+    (one shared ServeEngine, per-cell pools, paged-KV prefill->decode
+    handoff) through the --router-policy placement policy."""
+    from repro.serve.fleet import FleetRouter, make_fleet
+
+    eng = ServeEngine(cfg, params, max_batch=4, max_seq=args.max_seq,
+                      policy=get_policy(args.policy))
+    block_size = args.kv_block_size
+    n_blocks = args.kv_blocks or (
+        1 + 8 * max(1, -(-(args.max_seq) // block_size)))
+    cells = make_fleet(eng, args.engines, n_blocks=n_blocks,
+                       block_size=block_size,
+                       disaggregate=args.disaggregate)
+    router = FleetRouter(cells, policy=args.router_policy)
+    done = router.run(_build_stream(cfg, args, rng))
+    for r in sorted(done, key=lambda r: r.rid):
+        qos = r.mode or "engine-default"
+        extra = f" (downgraded from {r.downgraded_from})" \
+            if r.downgraded_from else ""
+        print(f"req{r.rid} [{qos}]{extra} arrive@{r.arrival} "
+              f"cell{r.engine_id} done@{r.done_step}: {r.out}")
+    print(router.stats())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Disaggregated serving fleet: prefill/decode engine replicas exchanging
+paged-KV handoffs behind a mode-aware router.
+
+Quickstart (one shared ServeEngine, four cells, mode-pinned routing)::
+
+    from repro.serve.fleet import FleetRouter, make_fleet
+
+    cells = make_fleet(engine, 4, n_blocks=64, block_size=8)
+    router = FleetRouter(cells, policy="mode_affinity")
+    done = router.run(requests)          # ScheduledRequest list, as ever
+    mine = router.drain("my-client")     # tagged completion fan-out
+
+See DESIGN.md §9 for the handoff protocol, router state machine, and
+graceful-degradation (backoff / mode-downgrade) rules.
+"""
+from repro.serve.fleet.engines import (  # noqa: F401
+    DecodeEngine,
+    FleetCell,
+    PrefillEngine,
+    make_fleet,
+)
+from repro.serve.fleet.handoff import KVHandoff, deliver  # noqa: F401
+from repro.serve.fleet.router import (  # noqa: F401
+    DOWNGRADE_CHAIN,
+    ROUTER_POLICIES,
+    FleetRouter,
+)

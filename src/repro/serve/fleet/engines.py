@@ -1,0 +1,216 @@
+"""Disaggregated prefill/decode engines and the cell that pairs them.
+
+One :class:`~repro.serve.engine.ServeEngine` is shared by *every* engine in
+the fleet — the jit'd paged step closures and pre-limbed decode weights are
+keyed by policy and pool *shape*, not pool identity, so N cells reuse the
+single-engine traces instead of compiling N copies.  What a cell owns is
+**state**: its own :class:`~repro.serve.kv_cache.PagedKVPool` plus the two
+loops over it —
+
+  * :class:`PrefillEngine` — a paced queue of admitted (block-reserved)
+    requests; each tick it prefills at most ``max_prefills_per_tick`` of
+    them (B=1 bucketed prefill via
+    :func:`repro.serve.primitives.prefill_request`) and emits
+    :class:`~repro.serve.fleet.handoff.KVHandoff` records.  The pacing is
+    the disaggregation lever: prefill is the long-pole launch, so bounding
+    prefills per tick bounds the inter-token latency spikes decode slots
+    see (the interference the fleet benchmark measures);
+  * :class:`DecodeEngine` — a slot map over the cell pool; accepts handoffs
+    into free slots (zero-copy from its own prefill engine, block-copy from
+    another cell's) and runs one policy-bucketed decode tick via
+    :func:`repro.serve.primitives.decode_bucket_step`.
+
+Pool discipline: the device arrays are single-writer — the router steps each
+cell's engines serially, so at most one jit step is in flight per pool
+(kv_cache.py docstring); only the host free list is lock-guarded.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.serve import primitives as prim
+from repro.serve.engine import ServeEngine
+from repro.serve.fleet.handoff import KVHandoff, deliver
+from repro.serve.kv_cache import PagedKVPool
+from repro.serve.primitives import ScheduledRequest
+
+
+class PrefillEngine:
+    """Paced prefill loop over a cell's pool.
+
+    Requests arrive *already block-reserved* (the router calls
+    :meth:`try_admit`, which runs the graceful all-or-nothing reservation),
+    so a queued request can never stall on KV mid-prefill.
+    ``max_prefills_per_tick=0`` means unpaced (greedy, the interleaved
+    single-engine discipline); ``1`` is the disaggregated default."""
+
+    def __init__(self, engine: ServeEngine, pool: PagedKVPool, *,
+                 cell_id: int = 0, max_prefills_per_tick: int = 1):
+        self.engine = engine
+        self.pool = pool
+        self.cell_id = cell_id
+        self.max_prefills_per_tick = max_prefills_per_tick
+        self.queue: Deque[ScheduledRequest] = deque()
+        self.prefills = 0
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def try_admit(self, req: ScheduledRequest) -> bool:
+        """Reserve the request's full block budget and enqueue it; False
+        (nothing reserved, nothing enqueued) when the pool cannot supply the
+        blocks right now — the router requeues with backoff."""
+        if not prim.try_reserve(self.pool, req):
+            return False
+        req.state = "running"
+        self.queue.append(req)
+        return True
+
+    def step(self) -> Tuple[List[KVHandoff], List[ScheduledRequest]]:
+        """Prefill up to ``max_prefills_per_tick`` queued requests.  Returns
+        (handoffs ready for a decode engine, requests already complete after
+        their first token — max_new=1 or instant EOS — with blocks freed)."""
+        handoffs: List[KVHandoff] = []
+        completed: List[ScheduledRequest] = []
+        budget = self.max_prefills_per_tick or len(self.queue)
+        for _ in range(min(budget, len(self.queue))):
+            req = self.queue.popleft()
+            tok = prim.prefill_request(self.engine, self.pool, req)
+            self.prefills += 1
+            req.out.append(tok)
+            req.next_token = tok
+            if len(req.out) >= req.max_new or tok == req.eos_token:
+                prim.release(self.pool, req)
+                req.state = "done"
+                completed.append(req)
+            else:
+                handoffs.append(KVHandoff(req=req, src_pool=self.pool,
+                                          src_cell=self.cell_id))
+        return handoffs, completed
+
+
+class DecodeEngine:
+    """Slot-mapped decode loop over a cell's pool (the decode half of the
+    single-engine scheduler, minus admission — that moved to the router)."""
+
+    def __init__(self, engine: ServeEngine, pool: PagedKVPool, *,
+                 cell_id: int = 0, max_slots: Optional[int] = None):
+        self.engine = engine
+        self.pool = pool
+        self.cell_id = cell_id
+        self.max_slots = max_slots or engine.max_batch
+        self._slots: List[Optional[ScheduledRequest]] = [None] * self.max_slots
+        self.steps = 0
+        self.decode_token_slots = 0
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self._slots)
+
+    @property
+    def n_free_slots(self) -> int:
+        return self.max_slots - self.n_active
+
+    @property
+    def kv_pressure(self) -> float:
+        """Fraction of the cell pool's allocatable blocks currently live —
+        the least_kv balancing signal."""
+        return self.pool.n_live / max(1, self.pool.n_blocks - 1)
+
+    def accept(self, handoff: KVHandoff) -> bool:
+        """Take a prefilled request into a free slot, delivering its KV
+        state into this engine's pool (zero-copy when the handoff originated
+        here; block copy from a foreign pool).  False — with the handoff
+        untouched — when no slot is free or the pool cannot host the
+        blocks."""
+        slot = next((i for i, r in enumerate(self._slots) if r is None), None)
+        if slot is None:
+            return False
+        if not deliver(handoff, self.pool):
+            return False
+        req = handoff.req
+        req.slot = slot
+        req.engine_id = self.cell_id
+        self._slots[slot] = req
+        return True
+
+    def step(self) -> List[ScheduledRequest]:
+        """One decode tick: bucket active slots by resolved policy, run one
+        jit'd step per bucket, evict finished requests (blocks freed, slot
+        cleared).  Returns the requests that completed this tick."""
+        active = [r for r in self._slots if r is not None]
+        completed: List[ScheduledRequest] = []
+        buckets = prim.bucket_by_policy(active, self.engine.policy)
+        for _, reqs in buckets:
+            toks = prim.decode_bucket_step(self.engine, self.pool, reqs,
+                                           max_slots=self.max_slots)
+            self.decode_token_slots += len(reqs)
+            for req, tok in zip(list(reqs), toks):
+                tok = int(tok)
+                req.out.append(tok)
+                req.next_token = tok
+                if len(req.out) >= req.max_new or tok == req.eos_token:
+                    prim.release(self.pool, req)
+                    self._slots[req.slot] = None
+                    req.slot = None
+                    req.state = "done"
+                    completed.append(req)
+        if buckets:
+            self.steps += 1
+        return completed
+
+
+class FleetCell:
+    """One engine replica: a pool plus its prefill and decode engines.
+
+    ``disaggregate=True`` paces prefill (``max_prefills_per_tick=1``) so
+    decode ticks are never starved behind a prefill burst;
+    ``disaggregate=False`` reproduces the interleaved single-engine
+    discipline (greedy prefill) inside the same fleet plumbing — the
+    benchmark's like-for-like interference baseline."""
+
+    def __init__(self, engine: ServeEngine, *, cell_id: int,
+                 n_blocks: int = 64, block_size: int = 16,
+                 max_blocks_per_seq: Optional[int] = None,
+                 disaggregate: bool = True):
+        cfg = engine.cfg
+        if cfg.family not in ("dense",) or cfg.mla is not None:
+            raise NotImplementedError(
+                "fleet serving supports dense GQA models only")
+        if max_blocks_per_seq is None:
+            max_blocks_per_seq = max(1, -(-engine.max_seq // block_size))
+        self.cell_id = cell_id
+        self.pool = PagedKVPool(
+            cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+            cfg.resolved_head_dim, max_blocks_per_seq=max_blocks_per_seq,
+            dtype=jnp.float32)
+        self.prefill = PrefillEngine(
+            engine, self.pool, cell_id=cell_id,
+            max_prefills_per_tick=1 if disaggregate else 0)
+        self.decode = DecodeEngine(engine, self.pool, cell_id=cell_id)
+
+    @property
+    def load(self) -> int:
+        """Queued + active requests — the queue-depth balancing signal."""
+        return self.prefill.queue_depth + self.decode.n_active
+
+
+def make_fleet(engine: ServeEngine, n_cells: int, *, n_blocks: int = 64,
+               block_size: int = 16,
+               max_blocks_per_seq: Optional[int] = None,
+               disaggregate: bool = True) -> List[FleetCell]:
+    """N identical cells over ONE shared ServeEngine: same jit'd step
+    closures, same pre-limbed weights, N independent pools.  Identical pool
+    geometry is what keeps the trace count flat in N — and what makes every
+    cross-cell block transfer geometry-compatible."""
+    if n_cells < 1:
+        raise ValueError("need at least one cell")
+    return [FleetCell(engine, cell_id=i, n_blocks=n_blocks,
+                      block_size=block_size,
+                      max_blocks_per_seq=max_blocks_per_seq,
+                      disaggregate=disaggregate)
+            for i in range(n_cells)]

@@ -1,0 +1,296 @@
+"""Mode-aware fleet router: admission control, load balancing, fan-out.
+
+The router is the fleet's only control loop — the follow-up IP-core paper's
+reservation-station shape (many requesters -> one shared reconfigurable
+datapath -> tagged results back to requesters) lifted to engine replicas:
+
+  * **admission** — a backlog ordered by (retry_at, submit order); per-mode
+    in-flight caps bound how much of the fleet any one QoS class can hold
+    (an M23 flood cannot starve M8 latency traffic);
+  * **placement** — ``round_robin`` (ignore state, spread arrivals),
+    ``least_kv`` (most free blocks first: KV-pressure balancing),
+    ``mode_affinity`` (each mode pins to a home cell, so a cell's decode
+    tick is one policy bucket — fuller micro-batches, fewer jit launches;
+    the throughput-scaling lever the soak benchmark gates on);
+  * **graceful degradation** — a placement that fails (KV pressure, caps)
+    requeues with exponential backoff ``base * 2^(requeues-1)`` instead of
+    raising; after ``downgrade_after`` requeues a mode-tagged request is
+    downgraded one step (M23 -> M16 -> M8) — the paper's run-time
+    reconfiguration applied as a load-shedding policy, recorded on the
+    request (``downgraded_from``), never silent;
+  * **handoff routing** — prefilled requests go to their origin cell's
+    decode engine (zero-copy); if its slots are full, to the least-loaded
+    other cell (cross-pool block copy); if nowhere fits, the handoff waits
+    in a retry queue — its blocks stay valid in the origin pool;
+  * **fan-out** — completions land in per-submitter queues
+    (``completions[submitter]``), the tagged-result return path.
+
+Determinism: with a fixed arrival trace the router is a pure function of its
+inputs — ticks are a virtual clock, ties break on submit order, and every
+engine step is serialized — so fleet runs are replayable and the KV-handoff
+bit-parity tests can compare whole token streams.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.serve import primitives as prim
+from repro.serve.fleet.engines import FleetCell
+from repro.serve.fleet.handoff import KVHandoff
+from repro.serve.kv_cache import BlockPoolExhausted
+from repro.serve.primitives import ScheduledRequest
+
+ROUTER_POLICIES = ("round_robin", "least_kv", "mode_affinity")
+
+# one-step QoS downgrade under sustained admission pressure
+DOWNGRADE_CHAIN = {"M23": "M16", "M16": "M8"}
+
+
+def _mode_key(req: ScheduledRequest) -> str:
+    """Admission/affinity bucket for a request's QoS class.  Full-policy
+    requests bucket together ('policy'): they are rare, never downgraded,
+    and affinity only needs *stable* keys, not semantic ones."""
+    if req.policy is not None:
+        return "policy"
+    if req.mode is None:
+        return "default"
+    return getattr(req.mode, "name", None) or str(req.mode)
+
+
+class FleetRouter:
+    """Routes :class:`ScheduledRequest` streams over a list of
+    :class:`FleetCell` replicas.  See the module docstring for the state
+    machine; :meth:`run` drives a virtual-clock arrival trace to completion,
+    :meth:`step` is one tick for external drivers."""
+
+    def __init__(self, cells: Sequence[FleetCell], *,
+                 policy: str = "round_robin",
+                 backoff_base: int = 1,
+                 admission_caps: Optional[Dict[str, int]] = None,
+                 downgrade_after: Optional[int] = None,
+                 max_idle_ticks: int = 64):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(
+                f"unknown router policy {policy!r}; have {ROUTER_POLICIES}")
+        if not cells:
+            raise ValueError("need at least one cell")
+        if backoff_base < 1:
+            raise ValueError("backoff_base must be >= 1")
+        self.cells = list(cells)
+        self.policy = policy
+        self.backoff_base = backoff_base
+        self.admission_caps = dict(admission_caps or {})
+        self.downgrade_after = downgrade_after
+        self.max_idle_ticks = max_idle_ticks
+        self.tick = 0
+        self._order = 0
+        # backlog entries: (retry_at, submit_order, request) — the order
+        # field is unique, so heap comparison never reaches the request
+        self._backlog: List[Tuple[int, int, ScheduledRequest]] = []
+        self._pending_handoffs: Deque[KVHandoff] = deque()
+        self._rr = 0
+        self._mode_home: Dict[str, int] = {}
+        self._inflight: Dict[str, int] = defaultdict(int)
+        self._admit_key: Dict[int, str] = {}
+        self.completions: Dict[str, Deque[ScheduledRequest]] = \
+            defaultdict(deque)
+        self.completed: List[ScheduledRequest] = []
+        self.useful_tokens = 0
+        self.requeue_events = 0
+        self.downgrade_events = 0
+
+    # ---- submission --------------------------------------------------------
+    def submit(self, req: ScheduledRequest) -> None:
+        if req.state != "queued":
+            raise ValueError(f"request {req.rid} already {req.state}")
+        prim.validate_request(self.cells[0].pool, req)
+        if req.t_submit < 0:
+            req.t_submit = time.perf_counter()
+        heapq.heappush(self._backlog, (self.tick, self._order, req))
+        self._order += 1
+
+    # ---- placement ---------------------------------------------------------
+    def _pick_cells(self, req: ScheduledRequest) -> List[FleetCell]:
+        """Candidate cells, preferred first.  Every policy returns the full
+        list (primary choice + pressure fallbacks) so one hot cell degrades
+        placement quality, not availability."""
+        if self.policy == "round_robin":
+            start = self._rr
+            self._rr = (self._rr + 1) % len(self.cells)
+            return [self.cells[(start + i) % len(self.cells)]
+                    for i in range(len(self.cells))]
+        if self.policy == "least_kv":
+            return sorted(
+                self.cells,
+                key=lambda c: (-c.pool.n_free, c.load, c.cell_id))
+        # mode_affinity: first-seen modes claim home cells in rotation
+        key = _mode_key(req)
+        home = self._mode_home.setdefault(
+            key, len(self._mode_home) % len(self.cells))
+        rest = sorted((c for c in self.cells if c.cell_id != home),
+                      key=lambda c: (-c.pool.n_free, c.load, c.cell_id))
+        return [self.cells[home]] + rest
+
+    def _try_place(self, req: ScheduledRequest) -> bool:
+        key = _mode_key(req)
+        cap = self.admission_caps.get(key)
+        if cap is not None and self._inflight[key] >= cap:
+            return False
+        for cell in self._pick_cells(req):
+            if cell.prefill.try_admit(req):
+                req.admitted_step = self.tick
+                self._inflight[key] += 1
+                self._admit_key[req.rid] = key
+                return True
+        return False
+
+    def _requeue(self, req: ScheduledRequest) -> None:
+        req.requeues += 1
+        self.requeue_events += 1
+        if (self.downgrade_after is not None
+                and req.requeues >= self.downgrade_after
+                and req.policy is None):
+            cur = _mode_key(req)
+            nxt = DOWNGRADE_CHAIN.get(cur)
+            if nxt is not None:
+                if req.downgraded_from is None:
+                    req.downgraded_from = cur
+                req.mode = nxt
+                req.resolved_policy = None  # re-resolve at the new mode
+                self.downgrade_events += 1
+        delay = self.backoff_base * (2 ** min(req.requeues - 1, 6))
+        heapq.heappush(self._backlog,
+                       (self.tick + delay, self._order, req))
+        self._order += 1
+
+    def _place_handoff(self, h: KVHandoff) -> bool:
+        """Origin cell first (zero-copy), then other cells by free decode
+        slots (cross-pool block copy)."""
+        origin = self.cells[h.src_cell] if 0 <= h.src_cell < len(self.cells) \
+            else self.cells[0]
+        others = sorted((c for c in self.cells if c is not origin),
+                        key=lambda c: (-c.decode.n_free_slots,
+                                       -c.pool.n_free, c.cell_id))
+        for cell in [origin] + others:
+            if cell.decode.accept(h):
+                return True
+        return False
+
+    def _finish(self, req: ScheduledRequest) -> None:
+        req.done_step = self.tick
+        req.t_done = time.perf_counter()
+        key = self._admit_key.pop(req.rid, None)
+        if key is not None:
+            self._inflight[key] -= 1
+        self.useful_tokens += len(req.out)
+        self.completed.append(req)
+        self.completions[req.submitter].append(req)
+
+    # ---- the tick ----------------------------------------------------------
+    def step(self) -> bool:
+        """One fleet tick: drain due backlog into cells, retry parked
+        handoffs, then step every cell's prefill and decode engines
+        (serially — the single-writer-per-pool discipline).  Returns True
+        if any work was done."""
+        progressed = False
+        due: List[Tuple[int, int, ScheduledRequest]] = []
+        while self._backlog and self._backlog[0][0] <= self.tick:
+            due.append(heapq.heappop(self._backlog))
+        for _, _, req in due:
+            if self._try_place(req):
+                progressed = True
+            else:
+                self._requeue(req)
+        for _ in range(len(self._pending_handoffs)):
+            h = self._pending_handoffs.popleft()
+            if self._place_handoff(h):
+                progressed = True
+            else:
+                self._pending_handoffs.append(h)
+        for cell in self.cells:
+            handoffs, instant = cell.prefill.step()
+            progressed = progressed or bool(handoffs or instant)
+            for req in instant:
+                self._finish(req)
+            for h in handoffs:
+                if not self._place_handoff(h):
+                    self._pending_handoffs.append(h)
+            if cell.decode.n_active:
+                progressed = True
+            for req in cell.decode.step():
+                self._finish(req)
+        self.tick += 1
+        return progressed
+
+    # ---- drivers -----------------------------------------------------------
+    @property
+    def n_inflight(self) -> int:
+        return (len(self._pending_handoffs)
+                + sum(c.load for c in self.cells))
+
+    def run(self, requests: Optional[Sequence[ScheduledRequest]] = None
+            ) -> List[ScheduledRequest]:
+        """Drive an arrival trace (virtual ``arrival`` ticks) to completion.
+        Idle ticks fast-forward the clock to the next arrival or backoff
+        expiry; sustained no-progress with work outstanding (every pool too
+        fragmented for the backlog head, no decode active to free blocks)
+        raises rather than spinning forever."""
+        pending = deque(sorted(requests or [],
+                               key=lambda r: (r.arrival, r.rid)))
+        idle = 0
+        while pending or self._backlog or self.n_inflight:
+            while pending and pending[0].arrival <= self.tick:
+                self.submit(pending.popleft())
+            if self.step():
+                idle = 0
+                continue
+            horizons = []
+            if pending:
+                horizons.append(pending[0].arrival)
+            if self._backlog:
+                horizons.append(self._backlog[0][0])
+            if horizons:
+                jump = min(horizons)
+                if jump > self.tick:
+                    self.tick = jump
+                    idle = 0
+                    continue
+            idle += 1
+            if idle > self.max_idle_ticks:
+                raise BlockPoolExhausted(
+                    f"fleet made no progress for {idle} ticks: "
+                    f"backlog={len(self._backlog)}, "
+                    f"pending_handoffs={len(self._pending_handoffs)}, "
+                    f"free blocks per cell="
+                    f"{[c.pool.n_free for c in self.cells]}")
+        return self.completed
+
+    def drain(self, submitter: str = "default") -> List[ScheduledRequest]:
+        """Pop this submitter's finished requests (tagged fan-out)."""
+        q = self.completions[submitter]
+        out = list(q)
+        q.clear()
+        return out
+
+    def stats(self) -> Dict[str, float]:
+        """Fleet-aggregate accounting + pooled latency percentiles (same
+        keys as ``ContinuousScheduler.stats()`` so benchmark rows line up)."""
+        steps = sum(c.decode.steps for c in self.cells)
+        slots = sum(c.decode.decode_token_slots for c in self.cells)
+        cap = sum(c.decode.steps * c.decode.max_slots for c in self.cells)
+        out = {"ticks": self.tick, "cells": len(self.cells),
+               "steps": steps,
+               "prefills": sum(c.prefill.prefills for c in self.cells),
+               "useful_tokens": self.useful_tokens,
+               "completed": len(self.completed),
+               "slot_occupancy": round(slots / cap, 4) if cap else 0.0,
+               "blocks_free": sum(c.pool.n_free for c in self.cells),
+               "blocks_live": sum(c.pool.n_live for c in self.cells),
+               "requeues": self.requeue_events,
+               "downgrades": self.downgrade_events,
+               "pending_handoffs": len(self._pending_handoffs)}
+        out.update(prim.latency_stats(self.completed))
+        return out

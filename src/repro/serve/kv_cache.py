@@ -34,7 +34,8 @@ model dependencies so ``models/attention.py`` can import it freely.
 """
 from __future__ import annotations
 
-from typing import Iterable, List, NamedTuple, Sequence
+import threading
+from typing import Iterable, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,10 +73,17 @@ class PagedKVPool:
     """Device block pool + host free-list allocator.
 
     The device arrays are functional (each jit step returns updated pools via
-    :meth:`update`); the free list is plain host state mutated by the
-    scheduler thread.  Allocation never hands out a block twice: a block is
-    either in ``_free``, in ``_live`` (owned by exactly one request), or the
-    trash block.
+    :meth:`update`); the free list is host state guarded by a lock, so fleet
+    engines sharing one pool (a disaggregated prefill engine allocating
+    while its decode engine frees evicted blocks) never race the accounting.
+    The device arrays themselves have a single-writer discipline: exactly
+    one engine step may be in flight per pool at a time (each step is a
+    functional read-modify-write of the whole pool array, so two concurrent
+    steps from the same base would lose each other's writes — the fleet
+    serializes steps per pool; cross-pool handoff copies blocks instead).
+    Allocation never hands out a block twice: a block is either in
+    ``_free``, in ``_live`` (owned by exactly one request), or the trash
+    block.
     """
 
     def __init__(self, n_layers: int, n_blocks: int, block_size: int,
@@ -94,6 +102,7 @@ class PagedKVPool:
         self.v = jnp.zeros(shape, dtype)
         self._free: List[int] = list(range(1, n_blocks))  # LIFO reuse
         self._live: set = set()
+        self._lock = threading.Lock()
 
     # ---- free-list accounting ---------------------------------------------
     @property
@@ -108,31 +117,45 @@ class PagedKVPool:
         """Blocks needed to hold ``n_tokens`` positions."""
         return max(1, -(-n_tokens // self.block_size))
 
+    def try_alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks off the free list, all-or-nothing, or return
+        None — the graceful admission primitive.  Exhaustion is an expected
+        serving condition (admission waits behind eviction reclaim), so the
+        scheduler/fleet loops route through this instead of :meth:`alloc`;
+        the lock makes check-and-take atomic under concurrent engines."""
+        with self._lock:
+            if n > self.max_blocks_per_seq or n > len(self._free):
+                return None
+            taken = [self._free.pop() for _ in range(n)]
+            for b in taken:
+                assert b not in self._live and b != TRASH_BLOCK  # never double
+                self._live.add(b)
+            return taken
+
     def alloc(self, n: int) -> List[int]:
-        """Take ``n`` blocks off the free list (all-or-nothing)."""
-        if n > self.max_blocks_per_seq:
-            raise BlockPoolExhausted(
-                f"request needs {n} blocks > max_blocks_per_seq="
-                f"{self.max_blocks_per_seq}")
-        if n > len(self._free):
+        """Take ``n`` blocks off the free list (all-or-nothing); raises
+        :class:`BlockPoolExhausted` when the reservation cannot be met."""
+        taken = self.try_alloc(n)
+        if taken is None:
+            if n > self.max_blocks_per_seq:
+                raise BlockPoolExhausted(
+                    f"request needs {n} blocks > max_blocks_per_seq="
+                    f"{self.max_blocks_per_seq}")
             raise BlockPoolExhausted(
                 f"need {n} blocks, free list has {len(self._free)} "
                 f"({len(self._live)} live)")
-        taken = [self._free.pop() for _ in range(n)]
-        for b in taken:
-            assert b not in self._live and b != TRASH_BLOCK  # never double
-            self._live.add(b)
         return taken
 
     def free(self, blocks: Iterable[int]) -> None:
         """Return a request's blocks to the free list (eviction reclaim)."""
-        for b in blocks:
-            if b == TRASH_BLOCK:
-                raise ValueError("cannot free the trash block")
-            if b not in self._live:
-                raise ValueError(f"double free / foreign block {b}")
-            self._live.discard(b)
-            self._free.append(b)
+        with self._lock:
+            for b in blocks:
+                if b == TRASH_BLOCK:
+                    raise ValueError("cannot free the trash block")
+                if b not in self._live:
+                    raise ValueError(f"double free / foreign block {b}")
+                self._live.discard(b)
+                self._free.append(b)
 
     def table_row(self, blocks: Sequence[int]) -> np.ndarray:
         """A request's block-table row: its blocks, trash-padded to width."""
@@ -143,6 +166,31 @@ class PagedKVPool:
     def trash_row(self) -> np.ndarray:
         """All-trash row for inactive / padded micro-batch slots."""
         return np.full((self.max_blocks_per_seq,), TRASH_BLOCK, np.int32)
+
+    # ---- cross-pool KV handoff --------------------------------------------
+    def transfer_blocks(self, dst: "PagedKVPool",
+                        src_blocks: Sequence[int],
+                        dst_blocks: Sequence[int]) -> None:
+        """Copy block *contents* into another pool — the disaggregated
+        prefill->decode KV handoff when the two engines do not share a pool.
+
+        Block-granular and layout-preserving: ``dst.pool[:, dst_blocks] =
+        src.pool[:, src_blocks]`` for K and V, one device gather + scatter
+        per side, no recomputation and no per-token reshaping (the in-repo
+        analogue of a NIC-side paged KV transfer).  The caller owns the
+        free-list bookkeeping on both pools (``dst_blocks`` must already be
+        allocated from ``dst``)."""
+        if len(src_blocks) != len(dst_blocks):
+            raise ValueError(
+                f"block count mismatch: {len(src_blocks)} src vs "
+                f"{len(dst_blocks)} dst")
+        if self.k.shape[2:] != dst.k.shape[2:] or self.n_layers != dst.n_layers:
+            raise ValueError(
+                f"incompatible pool geometry: {self.k.shape} vs {dst.k.shape}")
+        si = jnp.asarray(src_blocks, jnp.int32)
+        di = jnp.asarray(dst_blocks, jnp.int32)
+        dst.k = dst.k.at[:, di].set(self.k[:, si])
+        dst.v = dst.v.at[:, di].set(self.v[:, si])
 
     # ---- jit-side pool hand-back ------------------------------------------
     def update(self, k: jax.Array, v: jax.Array) -> None:

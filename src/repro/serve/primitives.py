@@ -1,0 +1,272 @@
+"""Shared serving primitives: the request record, paged admission/step
+building blocks, and latency accounting.
+
+Both serving control loops — the single-engine
+:class:`~repro.serve.scheduler.ContinuousScheduler` and the multi-engine
+fleet (``serve/fleet/``) — are thin state machines over the same four
+primitives:
+
+  * :func:`try_reserve` / :func:`release` — graceful all-or-nothing block
+    reservation against a :class:`~repro.serve.kv_cache.PagedKVPool`
+    (exhaustion is a *scheduling event*, never an exception: the caller
+    requeues and retries after eviction reclaim);
+  * :func:`prefill_request` — one B=1 bucketed paged prefill producing the
+    request's first output token;
+  * :func:`bucket_by_policy` + :func:`decode_bucket_step` — one decode tick:
+    active requests grouped by resolved per-request policy, each bucket
+    routed through the engine's format-keyed jit'd step;
+  * :func:`latency_stats` — per-request TTFT / TPOT / inter-token-latency /
+    queue-wait percentiles over a completed set (the router-balancing and
+    prefill-interference metrics the fleet benchmark gates on).
+
+Keeping these here (engine-agnostic, pool-explicit) is what lets a
+disaggregated prefill engine and a decode engine on a *different* pool run
+the exact jit'd steps the single-engine scheduler runs — the KV-handoff
+bit-parity guarantee (tests/test_fleet.py) falls out of the sharing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import context as context_lib
+from repro.core.policy import PrecisionPolicy
+from repro.serve.kv_cache import PagedKVPool
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """One serving request with its own precision QoS.
+
+    ``mode`` is a single format spelling (``"M8"``, a registered custom
+    format, ...) applied as a whole-network overlay on the engine's policy;
+    ``policy`` is a full per-request :class:`PrecisionPolicy` (object or
+    JSON wire form) and wins over ``mode``.  Leave both None to inherit the
+    engine policy.
+
+    The fleet router adds routing metadata: ``submitter`` tags whose
+    completion queue the finished request fans out to, ``engine_id`` records
+    the decode engine that served it, ``requeues``/``downgraded_from`` record
+    graceful-degradation events (admission backoff, mode downgrade under
+    pressure).  Latency accounting (``t_submit``/``t_first``/``t_done``,
+    per-token ``itl`` intervals) feeds :func:`latency_stats`.
+    """
+
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new: int = 16
+    mode: Optional[object] = None           # FormatLike QoS overlay
+    policy: Optional[object] = None         # PrecisionPolicy | JSON
+    eos_token: Optional[int] = None
+    arrival: int = 0                        # virtual arrival step
+    submitter: str = "default"              # completion fan-out tag
+
+    # runtime state (scheduler/fleet-owned)
+    out: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"                   # queued | running | done
+    slot: Optional[int] = None
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    length: int = 0                         # tokens in the paged cache
+    next_token: int = -1                    # decode input for the next step
+    admitted_step: int = -1
+    done_step: int = -1
+    engine_id: int = -1                     # decode engine that served it
+    requeues: int = 0                       # admission-pressure requeues
+    downgraded_from: Optional[str] = None   # original mode before downgrade
+    resolved_policy: Optional[PrecisionPolicy] = None  # cached at submit
+
+    # wall-clock latency accounting (perf_counter seconds; -1 = unset)
+    t_submit: float = -1.0
+    t_first: float = -1.0
+    t_done: float = -1.0
+    itl: List[float] = dataclasses.field(default_factory=list)
+
+
+def pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def resolve_request(req: ScheduledRequest, base: PrecisionPolicy
+                    ) -> PrecisionPolicy:
+    """Resolve + cache a request's effective policy (decode ticks hit this
+    per slot per step; JSON wire policies must not re-parse in the hot
+    loop).  Cleared to None by the router on mode downgrade."""
+    if req.resolved_policy is None:
+        req.resolved_policy = context_lib.resolve_request_policy(
+            mode=req.mode, policy=req.policy, base=base)
+    return req.resolved_policy
+
+
+def blocks_needed(pool: PagedKVPool, req: ScheduledRequest) -> int:
+    return pool.blocks_for_tokens(len(req.prompt) + req.max_new)
+
+
+def validate_request(pool: PagedKVPool, req: ScheduledRequest) -> None:
+    """Fail unschedulable requests NOW, not after the rest of the batch has
+    run (an oversized request at the FIFO head would otherwise stall
+    admissions and only raise at the very end of a run)."""
+    from repro.serve.kv_cache import BlockPoolExhausted
+
+    req.prompt = np.asarray(req.prompt, np.int32)
+    if req.prompt.ndim != 1 or req.prompt.size == 0:
+        raise ValueError("prompt must be a non-empty 1-D int32 array")
+    if req.max_new < 1:
+        raise ValueError("max_new must be >= 1")
+    need = blocks_needed(pool, req)
+    capacity = min(pool.max_blocks_per_seq, pool.n_blocks - 1)
+    if need > capacity:
+        raise BlockPoolExhausted(
+            f"request {req.rid} needs {need} blocks "
+            f"({len(req.prompt)} prompt + {req.max_new} new tokens) but "
+            f"the pool can hold at most {capacity} per request")
+
+
+def try_reserve(pool: PagedKVPool, req: ScheduledRequest) -> bool:
+    """Graceful all-or-nothing reservation of a request's full block budget.
+
+    Exhaustion mid-admission is an expected serving condition (the pool is
+    shared — under the fleet, by concurrent engines), so it must never
+    raise out of an admission loop or leak a partial reservation:
+    ``PagedKVPool.try_alloc`` takes the free-list lock, hands out all ``n``
+    blocks or none, and this returns False so the caller can requeue the
+    request behind eviction reclaim."""
+    blocks = pool.try_alloc(blocks_needed(pool, req))
+    if blocks is None:
+        return False
+    req.blocks = blocks
+    return True
+
+
+def release(pool: PagedKVPool, req: ScheduledRequest) -> None:
+    """Return a request's blocks to the free list (eviction / rollback)."""
+    if req.blocks:
+        pool.free(req.blocks)
+        req.blocks = []
+
+
+def table_width(pool: PagedKVPool, reqs: Sequence[ScheduledRequest]) -> int:
+    """Bounded paged reads: the block table handed to a jit step is sliced
+    to the bucket's maximum *used* block count (pow2-bucketed so the trace
+    count stays O(log max_blocks_per_seq)) instead of all
+    ``max_blocks_per_seq`` trash-padded columns — the fallback gather copies
+    W·bs tokens per slot per step, and the paged kernel runs W grid columns,
+    so trash padding is pure waste.  Positions past the sliced width still
+    redirect to the trash block on write (models/attention._paged_write
+    clamps against the table width)."""
+    used = max(len(r.blocks) for r in reqs)
+    return min(pow2_at_least(used), pool.max_blocks_per_seq)
+
+
+def prefill_request(engine, pool: PagedKVPool, req: ScheduledRequest) -> int:
+    """One B=1 bucketed paged prefill: writes the request's K/V blocks into
+    ``pool`` and returns the first output token (argmax of the true-last-
+    position logits).  The caller owns pushing the token / handing off."""
+    policy = resolve_request(req, engine.policy)
+    prefill_fn, _ = engine.paged_steps_for(policy)
+    n = len(req.prompt)
+    s_pad = pow2_at_least(n)
+    tokens = np.zeros((1, s_pad), np.int32)
+    tokens[0, :n] = req.prompt
+    table = pool.table_row(req.blocks)[None, :table_width(pool, [req])]
+    lengths = np.zeros((1,), np.int32)
+    logits, new_k, new_v = prefill_fn(
+        engine.params, pool.k, pool.v,
+        jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(tokens),
+        np.int32(n - 1))
+    pool.update(new_k, new_v)
+    req.length = n
+    now = time.perf_counter()
+    if req.t_first < 0:
+        req.t_first = now
+    return int(jnp.argmax(logits[0, 0, :]))
+
+
+def bucket_by_policy(reqs: Sequence[ScheduledRequest],
+                     base: PrecisionPolicy
+                     ) -> List[Tuple[PrecisionPolicy,
+                                     List[ScheduledRequest]]]:
+    """Group active requests by resolved policy: one micro-batch per bucket,
+    each routed through the format-keyed jit'd step for its policy."""
+    buckets: Dict[PrecisionPolicy, List[ScheduledRequest]] = {}
+    for req in reqs:
+        buckets.setdefault(resolve_request(req, base), []).append(req)
+    return list(buckets.items())
+
+
+def decode_bucket_step(engine, pool: PagedKVPool,
+                       reqs: Sequence[ScheduledRequest], *,
+                       max_slots: int) -> np.ndarray:
+    """One jit'd decode step for one policy bucket: builds the pow2-padded
+    (table, lengths, tokens) micro-batch, runs the step, advances each
+    request's cache length, and returns the new tokens (one per request).
+
+    Inter-token latency accounting: the wall-clock gap since the request's
+    previous token lands in ``req.itl`` — the per-token latency distribution
+    whose p95 the fleet benchmark compares across scheduling disciplines
+    (prefill interference shows up here as a heavy tail)."""
+    mb = min(pow2_at_least(len(reqs)), max_slots)
+    w = table_width(pool, reqs)
+    table = np.stack(
+        [pool.table_row(r.blocks) for r in reqs]
+        + [pool.trash_row()] * (mb - len(reqs)))[:, :w]
+    lengths = np.asarray([r.length for r in reqs]
+                         + [0] * (mb - len(reqs)), np.int32)
+    tokens = np.asarray([[r.next_token] for r in reqs]
+                        + [[0]] * (mb - len(reqs)), np.int32)
+    policy = resolve_request(reqs[0], engine.policy)
+    _, decode_fn = engine.paged_steps_for(policy)
+    params = engine._decode_params_for(policy)
+    logits, new_k, new_v = decode_fn(
+        params, pool.k, pool.v, jnp.asarray(table),
+        jnp.asarray(lengths), jnp.asarray(tokens))
+    pool.update(new_k, new_v)
+    toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+    now = time.perf_counter()
+    for r in reqs:
+        r.length += 1
+        prev = r.t_first if not r.itl else r.t_first + sum(r.itl)
+        r.itl.append(now - prev)
+    return toks[: len(reqs)]
+
+
+# ---------------------------------------------------------------------------
+# latency accounting
+# ---------------------------------------------------------------------------
+def _pcts(values: List[float], unit: float = 1.0) -> Tuple[float, float]:
+    if not values:
+        return 0.0, 0.0
+    arr = np.asarray(values, np.float64) * unit
+    return (round(float(np.percentile(arr, 50)), 3),
+            round(float(np.percentile(arr, 95)), 3))
+
+
+def latency_stats(completed: Sequence[ScheduledRequest]) -> Dict[str, float]:
+    """Per-request latency percentiles over a completed set.
+
+    TTFT (submit -> first token) and TPOT (mean decode time per output
+    token after the first) are wall-clock milliseconds; ITL is the pooled
+    per-token interval distribution (its p95 is where prefill interference
+    shows up); queue-wait is virtual steps (admitted - arrival), the
+    router-balancing signal that stays deterministic across machines."""
+    ttft = [r.t_first - r.t_submit for r in completed
+            if r.t_first >= 0 and r.t_submit >= 0]
+    tpot = [(r.t_done - r.t_first) / (len(r.out) - 1) for r in completed
+            if r.t_done >= 0 and r.t_first >= 0 and len(r.out) > 1]
+    itl = [dt for r in completed for dt in r.itl]
+    qwait = [float(r.admitted_step - r.arrival) for r in completed
+             if r.admitted_step >= 0]
+    out: Dict[str, float] = {}
+    for name, vals, unit in (("ttft_ms", ttft, 1e3), ("tpot_ms", tpot, 1e3),
+                             ("itl_ms", itl, 1e3),
+                             ("queue_wait_steps", qwait, 1.0)):
+        metric, suffix = name.rsplit("_", 1)
+        out[f"{metric}_p50_{suffix}"], out[f"{metric}_p95_{suffix}"] = \
+            _pcts(vals, unit)
+    return out

@@ -27,60 +27,27 @@ argmax of the prefill logits at the last prompt position; each decode step
 consumes the previous token and emits the next.  Because batch rows are
 independent through the whole network and paged reads are length-masked,
 a request's token stream is bit-identical whether it runs solo, statically
-batched (same prompt lengths), or continuously scheduled while neighbors
-join and leave (tests/test_serve_scheduler.py).
+batched (same prompt lengths), continuously scheduled while neighbors join
+and leave (tests/test_serve_scheduler.py), or split across a disaggregated
+prefill/decode engine pair (tests/test_fleet.py).
+
+The admission/prefill/decode-tick mechanics live in
+:mod:`repro.serve.primitives` — this class is the single-engine control loop
+over them; the multi-engine fleet (``serve/fleet/``) is another control loop
+over the same primitives.
 """
 from __future__ import annotations
 
-import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import context as context_lib
-from repro.core.policy import PrecisionPolicy
+from repro.serve import primitives as prim
 from repro.serve.engine import ServeEngine
 from repro.serve.kv_cache import BlockPoolExhausted, PagedKVPool
-
-
-@dataclasses.dataclass
-class ScheduledRequest:
-    """One serving request with its own precision QoS.
-
-    ``mode`` is a single format spelling (``"M8"``, a registered custom
-    format, ...) applied as a whole-network overlay on the engine's policy;
-    ``policy`` is a full per-request :class:`PrecisionPolicy` (object or
-    JSON wire form) and wins over ``mode``.  Leave both None to inherit the
-    engine policy.
-    """
-
-    rid: int
-    prompt: np.ndarray                      # (S,) int32
-    max_new: int = 16
-    mode: Optional[object] = None           # FormatLike QoS overlay
-    policy: Optional[object] = None         # PrecisionPolicy | JSON
-    eos_token: Optional[int] = None
-    arrival: int = 0                        # virtual arrival step
-
-    # runtime state (scheduler-owned)
-    out: List[int] = dataclasses.field(default_factory=list)
-    state: str = "queued"                   # queued | running | done
-    slot: Optional[int] = None
-    blocks: List[int] = dataclasses.field(default_factory=list)
-    length: int = 0                         # tokens in the paged cache
-    next_token: int = -1                    # decode input for the next step
-    admitted_step: int = -1
-    done_step: int = -1
-    resolved_policy: Optional[PrecisionPolicy] = None  # cached at submit
-
-
-def _pow2_at_least(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+from repro.serve.primitives import ScheduledRequest  # re-export  # noqa: F401
 
 
 class ContinuousScheduler:
@@ -125,31 +92,11 @@ class ContinuousScheduler:
     def submit(self, req: ScheduledRequest) -> None:
         if req.state != "queued":
             raise ValueError(f"request {req.rid} already {req.state}")
-        req.prompt = np.asarray(req.prompt, np.int32)
-        if req.prompt.ndim != 1 or req.prompt.size == 0:
-            raise ValueError("prompt must be a non-empty 1-D int32 array")
-        if req.max_new < 1:
-            raise ValueError("max_new must be >= 1")
-        # fail unschedulable requests NOW, not after the rest of the batch
-        # has run (an oversized request at the FIFO head would otherwise
-        # stall admissions and only raise at the very end of run())
-        need = self.pool.blocks_for_tokens(len(req.prompt) + req.max_new)
-        capacity = min(self.pool.max_blocks_per_seq, self.pool.n_blocks - 1)
-        if need > capacity:
-            raise BlockPoolExhausted(
-                f"request {req.rid} needs {need} blocks "
-                f"({len(req.prompt)} prompt + {req.max_new} new tokens) but "
-                f"the pool can hold at most {capacity} per request")
-        self._resolve(req)  # resolve + cache the policy once, up front
+        prim.validate_request(self.pool, req)
+        prim.resolve_request(req, self.engine.policy)  # resolve + cache once
+        if req.t_submit < 0:
+            req.t_submit = time.perf_counter()
         self._queue.append(req)
-
-    def _resolve(self, req: ScheduledRequest) -> PrecisionPolicy:
-        # resolved once per request (decode ticks hit this per slot per
-        # step; JSON wire policies must not re-parse in the hot loop)
-        if req.resolved_policy is None:
-            req.resolved_policy = context_lib.resolve_request_policy(
-                mode=req.mode, policy=req.policy, base=self.engine.policy)
-        return req.resolved_policy
 
     def _free_slot(self) -> Optional[int]:
         for i, r in enumerate(self._slots):
@@ -160,58 +107,31 @@ class ContinuousScheduler:
     def _admit(self) -> int:
         """Join-on-arrival: move queued requests into free slots while both a
         slot and the request's full block reservation are available (FIFO —
-        no head-of-line skipping, so admission order is deterministic)."""
+        no head-of-line skipping, so admission order is deterministic).
+
+        Block exhaustion mid-admission requeues instead of raising: the
+        request stays at the queue head (its reservation was all-or-nothing,
+        so nothing leaks) and retries once eviction refills the free list —
+        ``run()`` still raises for a request the pool can *never* satisfy.
+        """
         admitted = 0
         while self._queue:
             req = self._queue[0]
             slot = self._free_slot()
             if slot is None:
                 break
-            need = self.pool.blocks_for_tokens(len(req.prompt) + req.max_new)
-            # submit() already rejected anything over per-request capacity,
-            # so a short free list is always recoverable by eviction
-            if need > self.pool.n_free:
+            if not prim.try_reserve(self.pool, req):
                 break  # reservation not available yet; eviction will free it
             self._queue.popleft()
-            req.blocks = self.pool.alloc(need)
             req.slot = slot
             req.state = "running"
             req.admitted_step = self.steps
             self._slots[slot] = req
-            self._prefill(req)
+            tok = prim.prefill_request(self.engine, self.pool, req)
+            self.prefills += 1
+            self._push_token(req, tok)
             admitted += 1
         return admitted
-
-    def _table_width(self, reqs) -> int:
-        """Bounded paged reads: the block table handed to a jit step is
-        sliced to the bucket's maximum *used* block count (pow2-bucketed so
-        the trace count stays O(log max_blocks_per_seq)) instead of all
-        ``max_blocks_per_seq`` trash-padded columns — the fallback gather
-        copies W·bs tokens per slot per step, and the paged kernel runs W
-        grid columns, so trash padding is pure waste.  Positions past the
-        sliced width still redirect to the trash block on write
-        (models/attention._paged_write clamps against the table width)."""
-        used = max(len(r.blocks) for r in reqs)
-        return min(_pow2_at_least(used), self.pool.max_blocks_per_seq)
-
-    def _prefill(self, req: ScheduledRequest) -> None:
-        policy = self._resolve(req)
-        prefill_fn, _ = self.engine.paged_steps_for(policy)
-        n = len(req.prompt)
-        s_pad = _pow2_at_least(n)
-        tokens = np.zeros((1, s_pad), np.int32)
-        tokens[0, :n] = req.prompt
-        table = self.pool.table_row(req.blocks)[None, :self._table_width([req])]
-        lengths = np.zeros((1,), np.int32)
-        logits, new_k, new_v = prefill_fn(
-            self.engine.params, self.pool.k, self.pool.v,
-            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(tokens),
-            np.int32(n - 1))
-        self.pool.update(new_k, new_v)
-        self.prefills += 1
-        req.length = n
-        tok = int(jnp.argmax(logits[0, 0, :]))
-        self._push_token(req, tok)
 
     # ---- decode ------------------------------------------------------------
     def _push_token(self, req: ScheduledRequest, tok: int) -> None:
@@ -225,50 +145,26 @@ class ContinuousScheduler:
         """Evict-on-EOS: return the request's blocks to the free list and
         release its slot; the surviving slots' state is untouched, so their
         token streams are unaffected (bit-identical — tested)."""
-        self.pool.free(req.blocks)
-        req.blocks = []
+        prim.release(self.pool, req)
         self._slots[req.slot] = None
         req.slot = None
         req.state = "done"
         req.done_step = self.steps
+        req.t_done = time.perf_counter()
         self.completed.append(req)
-
-    def _decode_buckets(self) -> List[Tuple[PrecisionPolicy,
-                                            List[ScheduledRequest]]]:
-        """Group active slots by resolved policy: one micro-batch per bucket,
-        each routed through the format-keyed jit'd step for its policy."""
-        buckets: Dict[PrecisionPolicy, List[ScheduledRequest]] = {}
-        for req in self._slots:
-            if req is not None:
-                buckets.setdefault(self._resolve(req), []).append(req)
-        return list(buckets.items())
 
     def step(self) -> bool:
         """One scheduler tick: admit arrivals, then run one decode step for
         every active policy bucket.  Returns True if any work was done."""
         admitted = self._admit()
-        buckets = self._decode_buckets()
-        for policy, reqs in buckets:
-            mb = min(_pow2_at_least(len(reqs)), self.max_slots)
-            w = self._table_width(reqs)
-            table = np.stack(
-                [self.pool.table_row(r.blocks) for r in reqs]
-                + [self.pool.trash_row()] * (mb - len(reqs)))[:, :w]
-            lengths = np.asarray([r.length for r in reqs]
-                                 + [0] * (mb - len(reqs)), np.int32)
-            tokens = np.asarray([[r.next_token] for r in reqs]
-                                + [[0]] * (mb - len(reqs)), np.int32)
-            _, decode_fn = self.engine.paged_steps_for(policy)
-            params = self.engine._decode_params_for(policy)
-            logits, new_k, new_v = decode_fn(
-                params, self.pool.k, self.pool.v, jnp.asarray(table),
-                jnp.asarray(lengths), jnp.asarray(tokens))
-            self.pool.update(new_k, new_v)
-            toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        active = [r for r in self._slots if r is not None]
+        buckets = prim.bucket_by_policy(active, self.engine.policy)
+        for _, reqs in buckets:
+            toks = prim.decode_bucket_step(self.engine, self.pool, reqs,
+                                           max_slots=self.max_slots)
             self.decode_token_slots += len(reqs)
-            for i, req in enumerate(reqs):
-                req.length += 1
-                self._push_token(req, int(toks[i]))
+            for req, tok in zip(list(reqs), toks):
+                self._push_token(req, int(tok))
         if buckets:
             self.steps += 1
         return bool(admitted or buckets)
@@ -298,7 +194,7 @@ class ContinuousScheduler:
                     head = self._queue[0]
                     raise BlockPoolExhausted(
                         f"request {head.rid} needs "
-                        f"{self.pool.blocks_for_tokens(len(head.prompt) + head.max_new)} "
+                        f"{prim.blocks_needed(self.pool, head)} "
                         f"blocks but the pool can never satisfy it "
                         f"(free={self.pool.n_free}, "
                         f"max_blocks_per_seq={self.pool.max_blocks_per_seq})")
@@ -309,11 +205,17 @@ class ContinuousScheduler:
         return self.completed
 
     def stats(self) -> Dict[str, float]:
+        """Occupancy/accounting counters plus per-request latency
+        percentiles (TTFT / TPOT / inter-token / queue-wait p50/p95 via
+        :func:`repro.serve.primitives.latency_stats`) — the row the serving
+        benchmarks surface so scheduling disciplines are comparable."""
         occ = (self.decode_token_slots / (self.steps * self.max_slots)
                if self.steps else 0.0)
-        return {"steps": self.steps, "prefills": self.prefills,
-                "useful_tokens": self.useful_tokens,
-                "completed": len(self.completed),
-                "slot_occupancy": round(occ, 4),
-                "blocks_free": self.pool.n_free,
-                "blocks_live": self.pool.n_live}
+        out = {"steps": self.steps, "prefills": self.prefills,
+               "useful_tokens": self.useful_tokens,
+               "completed": len(self.completed),
+               "slot_occupancy": round(occ, 4),
+               "blocks_free": self.pool.n_free,
+               "blocks_live": self.pool.n_live}
+        out.update(prim.latency_stats(self.completed))
+        return out

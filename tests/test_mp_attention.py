@@ -328,18 +328,13 @@ class TestBoundedGather:
             def __init__(self, n):
                 self.blocks = list(range(n))
 
-        from repro.configs.registry import get_config
-        from repro.models import transformer as T
-        from repro.serve.engine import ServeEngine
-        from repro.serve.scheduler import ContinuousScheduler
+        from repro.serve.kv_cache import PagedKVPool
+        from repro.serve.primitives import table_width
 
-        cfg = get_config("paper-mpfp-100m", smoke=True)
-        params = T.init_params(cfg, jax.random.PRNGKey(0))
-        eng = ServeEngine(cfg, params, max_batch=2, max_seq=64)
-        sched = ContinuousScheduler(eng, n_blocks=32, block_size=4)
-        assert sched._table_width([_R(1)]) == 1
-        assert sched._table_width([_R(3), _R(5)]) == 8
-        assert sched._table_width([_R(16)]) == 16  # clamped to capacity
+        pool = PagedKVPool(1, 32, 4, 2, 8, max_blocks_per_seq=16)
+        assert table_width(pool, [_R(1)]) == 1
+        assert table_width(pool, [_R(3), _R(5)]) == 8
+        assert table_width(pool, [_R(16)]) == 16  # clamped to capacity
 
 
 # =========================================================================
