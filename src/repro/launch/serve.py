@@ -17,6 +17,16 @@ prefill/decode with paged-KV handoff — serve/fleet/):
     PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
         --smoke --engines 4 --disaggregate --router-policy mode_affinity \
         --requests 16 --mixed-modes
+
+Chaos path (deterministic fault injection against the fleet — kill cells,
+poison decode steps, fail handoffs — per a JSON plan; see serve/faults.py):
+
+    python - <<'EOF'  # write a seeded plan
+    from repro.serve.faults import FaultPlan
+    open("plan.json", "w").write(FaultPlan.chaos(seed=0, n_cells=4).to_json())
+    EOF
+    PYTHONPATH=src python -m repro.launch.serve --arch paper-mpfp-100m \
+        --smoke --engines 4 --requests 16 --fault-plan plan.json
 """
 import argparse
 
@@ -66,6 +76,10 @@ def main():
     ap.add_argument("--router-policy", default="round_robin",
                     choices=("round_robin", "least_kv", "mode_affinity"),
                     help="fleet only: cell placement policy")
+    ap.add_argument("--fault-plan", default="",
+                    help="fleet only: JSON fault plan (serve/faults.py "
+                         "FaultPlan) injected deterministically — cell "
+                         "crashes, poisoned decode steps, failed handoffs")
     args = ap.parse_args()
 
     if args.backend:
@@ -155,14 +169,25 @@ def _run_fleet(cfg, params, args, rng):
     cells = make_fleet(eng, args.engines, n_blocks=n_blocks,
                        block_size=block_size,
                        disaggregate=args.disaggregate)
-    router = FleetRouter(cells, policy=args.router_policy)
+    plan = None
+    if args.fault_plan:
+        from repro.serve.faults import FaultPlan
+        with open(args.fault_plan) as f:
+            plan = FaultPlan.from_json(f.read())
+    router = FleetRouter(cells, policy=args.router_policy, fault_plan=plan)
     done = router.run(_build_stream(cfg, args, rng))
     for r in sorted(done, key=lambda r: r.rid):
         qos = r.mode or "engine-default"
         extra = f" (downgraded from {r.downgraded_from})" \
             if r.downgraded_from else ""
+        if r.escalated_from:
+            extra += f" (escalated from {r.escalated_from})"
+        if r.recoveries:
+            extra += f" (recovered x{r.recoveries})"
         print(f"req{r.rid} [{qos}]{extra} arrive@{r.arrival} "
               f"cell{r.engine_id} done@{r.done_step}: {r.out}")
+    if plan is not None:
+        print("fault trace:", router.injector.trace)
     print(router.stats())
 
 

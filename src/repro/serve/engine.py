@@ -130,6 +130,12 @@ def make_paged_prefill_step(cfg: ModelConfig, policy: PrecisionPolicy,
     a shape bucket, the padded tail writes land past the reservation (trash
     or rewritten-before-read positions, serve/kv_cache.py) and the returned
     logits row is the real last token's.
+
+    Returns ``(last_logits, guard_stat, pool_k, pool_v)`` — ``guard_stat``
+    is the per-slot max |logit| scalar the numerical guardrail polices
+    (``jnp.max`` propagates NaN, so non-finite logits surface as a
+    non-finite stat); computing it inside the step keeps the check free of
+    extra launches.
     """
     L = cfg.n_layers
 
@@ -141,7 +147,8 @@ def make_paged_prefill_step(cfg: ModelConfig, policy: PrecisionPolicy,
         logits, _, new_cache = T.forward(params, {"tokens": tokens}, cfg,
                                          policy, cache=cache, mesh=mesh)
         last = jax.lax.dynamic_slice_in_dim(logits, last_idx, 1, axis=1)
-        return last, new_cache.attn.k, new_cache.attn.v
+        stat = jnp.max(jnp.abs(last[:, 0, :]), axis=-1)
+        return last, stat, new_cache.attn.k, new_cache.attn.v
 
     return step
 
@@ -153,7 +160,10 @@ def make_paged_decode_step(cfg: ModelConfig, policy: PrecisionPolicy,
     The active-slot mask is carried by the (table, lengths) pair itself:
     padded/inactive rows are (all-trash row, length 0), so their reads mask
     to nothing and their writes land in the trash block — no in-kernel
-    branching.  Returns (logits (B, 1, V), new pool k, new pool v).
+    branching.  Returns ``(logits (B, 1, V), guard_stat (B,), new pool k,
+    new pool v)``: ``guard_stat`` is the per-slot max |logit| the numerical
+    guardrail polices — folded into the step so the finite check costs one
+    scalar per slot and no extra launch.
     """
     L = cfg.n_layers
 
@@ -164,7 +174,8 @@ def make_paged_decode_step(cfg: ModelConfig, policy: PrecisionPolicy,
             length=jnp.broadcast_to(lengths, (L,) + lengths.shape)))
         logits, _, new_cache = T.forward(params, {"tokens": tokens}, cfg,
                                          policy, cache=cache, mesh=mesh)
-        return logits, new_cache.attn.k, new_cache.attn.v
+        stat = jnp.max(jnp.abs(logits[:, -1, :]), axis=-1)
+        return logits, stat, new_cache.attn.k, new_cache.attn.v
 
     return step
 

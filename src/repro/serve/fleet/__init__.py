@@ -10,9 +10,26 @@ Quickstart (one shared ServeEngine, four cells, mode-pinned routing)::
     done = router.run(requests)          # ScheduledRequest list, as ever
     mine = router.drain("my-client")     # tagged completion fan-out
 
+Chaos quickstart (deterministic fault injection + recovery)::
+
+    from repro.serve.faults import FaultPlan
+
+    plan = FaultPlan.chaos(seed=0, n_cells=4)   # or hand-written events
+    router = FleetRouter(cells, fault_plan=plan)
+    done = router.run(requests)                  # still completes 100%
+    router.stats()["cell_deaths"], router.injector.trace
+
 See DESIGN.md §9 for the handoff protocol, router state machine, and
-graceful-degradation (backoff / mode-downgrade) rules.
+graceful-degradation (backoff / mode-downgrade) rules; §10 for the failure
+model: cell health states, in-flight recovery, and the numerical guardrail's
+precision-escalation ladder.
 """
+from repro.serve.faults import (  # noqa: F401
+    CellCrashed,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+)
 from repro.serve.fleet.engines import (  # noqa: F401
     DecodeEngine,
     FleetCell,
@@ -22,6 +39,12 @@ from repro.serve.fleet.engines import (  # noqa: F401
 from repro.serve.fleet.handoff import KVHandoff, deliver  # noqa: F401
 from repro.serve.fleet.router import (  # noqa: F401
     DOWNGRADE_CHAIN,
+    HEALTH_STATES,
     ROUTER_POLICIES,
+    CellHealth,
     FleetRouter,
+)
+from repro.serve.primitives import (  # noqa: F401
+    ESCALATE_CHAIN,
+    GuardrailConfig,
 )

@@ -33,9 +33,10 @@ import jax.numpy as jnp
 
 from repro.serve import primitives as prim
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import CellCrashed, FaultInjector
 from repro.serve.fleet.handoff import KVHandoff, deliver
 from repro.serve.kv_cache import PagedKVPool
-from repro.serve.primitives import ScheduledRequest
+from repro.serve.primitives import GuardrailConfig, ScheduledRequest
 
 
 class PrefillEngine:
@@ -73,17 +74,24 @@ class PrefillEngine:
     def step(self) -> Tuple[List[KVHandoff], List[ScheduledRequest]]:
         """Prefill up to ``max_prefills_per_tick`` queued requests.  Returns
         (handoffs ready for a decode engine, requests already complete after
-        their first token — max_new=1 or instant EOS — with blocks freed)."""
+        their first token — max_new=1 or instant EOS — with blocks freed).
+
+        A *recovery* request (non-empty ``req.out``: it lost its cell or
+        tripped the guardrail mid-stream) re-prefills its generated prefix
+        instead — the emitted history is immutable, so the prefill's output
+        token is discarded and decode resumes from ``out[-1]``."""
         handoffs: List[KVHandoff] = []
         completed: List[ScheduledRequest] = []
         budget = self.max_prefills_per_tick or len(self.queue)
         for _ in range(min(budget, len(self.queue))):
             req = self.queue.popleft()
+            resumed = bool(req.out)
             tok = prim.prefill_request(self.engine, self.pool, req)
             self.prefills += 1
-            req.out.append(tok)
-            req.next_token = tok
-            if len(req.out) >= req.max_new or tok == req.eos_token:
+            if not resumed:
+                req.out.append(tok)
+                req.next_token = tok
+            if len(req.out) >= req.max_new or req.out[-1] == req.eos_token:
                 prim.release(self.pool, req)
                 req.state = "done"
                 completed.append(req)
@@ -98,7 +106,8 @@ class DecodeEngine:
     single-engine scheduler, minus admission — that moved to the router)."""
 
     def __init__(self, engine: ServeEngine, pool: PagedKVPool, *,
-                 cell_id: int = 0, max_slots: Optional[int] = None):
+                 cell_id: int = 0, max_slots: Optional[int] = None,
+                 guard: Optional[GuardrailConfig] = None):
         self.engine = engine
         self.pool = pool
         self.cell_id = cell_id
@@ -106,6 +115,9 @@ class DecodeEngine:
         self._slots: List[Optional[ScheduledRequest]] = [None] * self.max_slots
         self.steps = 0
         self.decode_token_slots = 0
+        self.guard = guard or GuardrailConfig()
+        self.injector: Optional[FaultInjector] = None  # chaos seam
+        self.guard_trips = 0
 
     @property
     def n_active(self) -> int:
@@ -130,7 +142,8 @@ class DecodeEngine:
         slot = next((i for i, r in enumerate(self._slots) if r is None), None)
         if slot is None:
             return False
-        if not deliver(handoff, self.pool):
+        if not deliver(handoff, self.pool, injector=self.injector,
+                       dst_cell=self.cell_id):
             return False
         req = handoff.req
         req.slot = slot
@@ -138,18 +151,34 @@ class DecodeEngine:
         self._slots[slot] = req
         return True
 
-    def step(self) -> List[ScheduledRequest]:
+    def step(self) -> Tuple[List[ScheduledRequest], List[ScheduledRequest]]:
         """One decode tick: bucket active slots by resolved policy, run one
         jit'd step per bucket, evict finished requests (blocks freed, slot
-        cleared).  Returns the requests that completed this tick."""
+        cleared).  Returns ``(completed, tripped)``: requests that finished
+        this tick, and requests the numerical guardrail evicted (poisoned
+        logits — their bad token is discarded, their blocks are freed, and
+        the router re-admits them escalated one mode up)."""
         active = [r for r in self._slots if r is not None]
         completed: List[ScheduledRequest] = []
+        tripped: List[ScheduledRequest] = []
         buckets = prim.bucket_by_policy(active, self.engine.policy)
         for _, reqs in buckets:
-            toks = prim.decode_bucket_step(self.engine, self.pool, reqs,
-                                           max_slots=self.max_slots)
+            toks, ok = prim.decode_bucket_step(
+                self.engine, self.pool, reqs, max_slots=self.max_slots,
+                guard=self.guard, injector=self.injector,
+                cell_id=self.cell_id)
             self.decode_token_slots += len(reqs)
-            for req, tok in zip(list(reqs), toks):
+            for req, tok, good in zip(list(reqs), toks, ok):
+                if not good:
+                    # evict ONLY the poisoned slot; survivors in the same
+                    # bucket keep streaming untouched
+                    prim.release(self.pool, req)
+                    self._slots[req.slot] = None
+                    req.slot = None
+                    req.guard_trips += 1
+                    self.guard_trips += 1
+                    tripped.append(req)
+                    continue
                 tok = int(tok)
                 req.out.append(tok)
                 req.next_token = tok
@@ -161,7 +190,7 @@ class DecodeEngine:
                     completed.append(req)
         if buckets:
             self.steps += 1
-        return completed
+        return completed, tripped
 
 
 class FleetCell:
@@ -176,7 +205,8 @@ class FleetCell:
     def __init__(self, engine: ServeEngine, *, cell_id: int,
                  n_blocks: int = 64, block_size: int = 16,
                  max_blocks_per_seq: Optional[int] = None,
-                 disaggregate: bool = True):
+                 disaggregate: bool = True,
+                 guard: Optional[GuardrailConfig] = None):
         cfg = engine.cfg
         if cfg.family not in ("dense",) or cfg.mla is not None:
             raise NotImplementedError(
@@ -191,18 +221,49 @@ class FleetCell:
         self.prefill = PrefillEngine(
             engine, self.pool, cell_id=cell_id,
             max_prefills_per_tick=1 if disaggregate else 0)
-        self.decode = DecodeEngine(engine, self.pool, cell_id=cell_id)
+        self.decode = DecodeEngine(engine, self.pool, cell_id=cell_id,
+                                   guard=guard)
+        self.injector: Optional[FaultInjector] = None
 
     @property
     def load(self) -> int:
         """Queued + active requests — the queue-depth balancing signal."""
         return self.prefill.queue_depth + self.decode.n_active
 
+    def install_faults(self, injector: Optional[FaultInjector]) -> None:
+        """Wire one injector through every chaos seam this cell owns (decode
+        step wrapper, handoff delivery, pool block transfer)."""
+        self.injector = injector
+        self.decode.injector = injector
+        self.pool.fault_injector = injector
+
+    def tick(self, tick: int) -> Tuple[List[KVHandoff],
+                                       List[ScheduledRequest],
+                                       List[ScheduledRequest],
+                                       List[ScheduledRequest], float]:
+        """One cell tick: fault checks, then the paced prefill step and one
+        decode step.  Returns ``(handoffs, instant_completions,
+        decode_completions, guard_tripped, injected_delay_s)``.
+
+        Raises :class:`~repro.serve.faults.CellCrashed` when the installed
+        plan schedules this cell's death — the router catches it, marks the
+        cell dead, and recovers every in-flight request from its
+        host-visible prefix."""
+        delay = 0.0
+        if self.injector is not None:
+            if self.injector.cell_crash(self.cell_id):
+                raise CellCrashed(self.cell_id)
+            delay = self.injector.straggler_delay(self.cell_id)
+        handoffs, instant = self.prefill.step()
+        completed, tripped = self.decode.step()
+        return handoffs, instant, completed, tripped, delay
+
 
 def make_fleet(engine: ServeEngine, n_cells: int, *, n_blocks: int = 64,
                block_size: int = 16,
                max_blocks_per_seq: Optional[int] = None,
-               disaggregate: bool = True) -> List[FleetCell]:
+               disaggregate: bool = True,
+               guard: Optional[GuardrailConfig] = None) -> List[FleetCell]:
     """N identical cells over ONE shared ServeEngine: same jit'd step
     closures, same pre-limbed weights, N independent pools.  Identical pool
     geometry is what keeps the trace count flat in N — and what makes every
@@ -212,5 +273,5 @@ def make_fleet(engine: ServeEngine, n_cells: int, *, n_blocks: int = 64,
     return [FleetCell(engine, cell_id=i, n_blocks=n_blocks,
                       block_size=block_size,
                       max_blocks_per_seq=max_blocks_per_seq,
-                      disaggregate=disaggregate)
+                      disaggregate=disaggregate, guard=guard)
             for i in range(n_cells)]

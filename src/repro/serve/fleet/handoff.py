@@ -39,16 +39,23 @@ class KVHandoff:
     src_cell: int = -1
 
 
-def deliver(handoff: KVHandoff, dst_pool: PagedKVPool) -> bool:
+def deliver(handoff: KVHandoff, dst_pool: PagedKVPool, *,
+            injector=None, dst_cell: int = -1) -> bool:
     """Move the handoff's KV state into ``dst_pool``; True on success.
 
     Same-pool delivery is free.  Cross-pool delivery reserves matching
     blocks in the destination (all-or-nothing), copies contents, frees the
     source blocks, and repoints the request — on reservation failure nothing
-    changes and the caller keeps the handoff."""
+    changes and the caller keeps the handoff.  An injected
+    ``handoff_transfer_fail`` (serve/faults.py) fails the transfer *before
+    any side effect* — the handoff stays valid against its source pool and
+    parks for retry, exactly like destination exhaustion."""
     req = handoff.req
     if dst_pool is handoff.src_pool:
         return True
+    if injector is not None and injector.transfer_fail(handoff.src_cell,
+                                                       dst_cell):
+        return False
     dst_blocks = dst_pool.try_alloc(len(req.blocks))
     if dst_blocks is None:
         return False

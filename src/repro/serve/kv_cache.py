@@ -103,6 +103,11 @@ class PagedKVPool:
         self._free: List[int] = list(range(1, n_blocks))  # LIFO reuse
         self._live: set = set()
         self._lock = threading.Lock()
+        # chaos seam (serve/faults.py): when installed, transfer_blocks asks
+        # it whether this transfer's payload lands corrupted — a poisoned
+        # cross-cell handoff the decode guardrail must catch.  None in
+        # production: the only cost is this attribute check per transfer.
+        self.fault_injector = None
 
     # ---- free-list accounting ---------------------------------------------
     @property
@@ -191,6 +196,13 @@ class PagedKVPool:
         di = jnp.asarray(dst_blocks, jnp.int32)
         dst.k = dst.k.at[:, di].set(self.k[:, si])
         dst.v = dst.v.at[:, di].set(self.v[:, si])
+        inj = dst.fault_injector or self.fault_injector
+        if inj is not None and inj.block_corrupt():
+            # injected transport corruption: the first transferred block
+            # arrives as NaN — the decode guardrail, not this layer, is
+            # responsible for catching it downstream
+            dst.k = dst.k.at[:, di[0]].set(jnp.nan)
+            dst.v = dst.v.at[:, di[0]].set(jnp.nan)
 
     # ---- jit-side pool hand-back ------------------------------------------
     def update(self, k: jax.Array, v: jax.Array) -> None:

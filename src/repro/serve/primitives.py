@@ -17,7 +17,20 @@ primitives:
     routed through the engine's format-keyed jit'd step;
   * :func:`latency_stats` — per-request TTFT / TPOT / inter-token-latency /
     queue-wait percentiles over a completed set (the router-balancing and
-    prefill-interference metrics the fleet benchmark gates on).
+    prefill-interference metrics the fleet benchmark gates on);
+  * the **numerical guardrail** — every decode step returns one scalar per
+    slot (max |logit|, computed inside the jit'd step so the check costs no
+    extra launch); :func:`guard_check` turns it into a per-slot verdict
+    (NaN/Inf, or past the registry ``rel_err_bound``-scaled sentinel) and
+    :func:`escalate_mode` is the recovery dial — the inverse of the
+    router's pressure downgrade: a poisoned M8 request re-admits at M16.
+
+Recovery rides on the same prefill primitive: a request that already holds
+generated tokens (``req.out``) re-prefills its *host-visible prefix*
+(prompt + all emitted tokens but the last) instead of just the prompt, which
+rebuilds the exact KV state the lost cell held — then decode resumes by
+consuming ``out[-1]`` as if nothing happened.  See
+:func:`prefill_request`.
 
 Keeping these here (engine-agnostic, pool-explicit) is what lets a
 disaggregated prefill engine and a decode engine on a *different* pool run
@@ -34,8 +47,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import context as context_lib
+from repro.core.formats import is_auto
 from repro.core.policy import PrecisionPolicy
 from repro.serve.kv_cache import PagedKVPool
+
+# the guardrail's recovery dial: one mode UP on numerical divergence — the
+# exact inverse of the router's pressure DOWNGRADE_CHAIN (M23 -> M16 -> M8)
+ESCALATE_CHAIN = {"M8": "M16", "M16": "M23"}
 
 
 @dataclasses.dataclass
@@ -64,10 +82,12 @@ class ScheduledRequest:
     eos_token: Optional[int] = None
     arrival: int = 0                        # virtual arrival step
     submitter: str = "default"              # completion fan-out tag
+    deadline_ticks: Optional[int] = None    # TTL in virtual ticks from submit
 
     # runtime state (scheduler/fleet-owned)
     out: List[int] = dataclasses.field(default_factory=list)
-    state: str = "queued"                   # queued | running | done
+    state: str = "queued"           # queued | running | done |
+    #                                 expired | canceled
     slot: Optional[int] = None
     blocks: List[int] = dataclasses.field(default_factory=list)
     length: int = 0                         # tokens in the paged cache
@@ -78,6 +98,15 @@ class ScheduledRequest:
     requeues: int = 0                       # admission-pressure requeues
     downgraded_from: Optional[str] = None   # original mode before downgrade
     resolved_policy: Optional[PrecisionPolicy] = None  # cached at submit
+
+    # fault-tolerance state
+    submitted_tick: int = -1                # deadline epoch (virtual)
+    recoveries: int = 0                     # cell-loss recoveries survived
+    guard_trips: int = 0                    # numerical guardrail evictions
+    escalated_from: Optional[str] = None    # original mode before escalation
+    lost_tick: int = -1                     # tick the serving cell was lost
+    # len(out) at each re-admission — chaos parity re-runs the suffix solo
+    recovery_prefixes: List[int] = dataclasses.field(default_factory=list)
 
     # wall-clock latency accounting (perf_counter seconds; -1 = unset)
     t_submit: float = -1.0
@@ -91,6 +120,72 @@ def pow2_at_least(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+# ---------------------------------------------------------------------------
+# numerical guardrail
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GuardrailConfig:
+    """Per-slot decode-logit policing.
+
+    The finite check (NaN/Inf anywhere in a slot's logits) is always on.
+    ``logit_bound`` adds the sentinel: a slot whose max |logit| exceeds
+    ``logit_bound * (1 + fmt.rel_err_bound)`` — the registry's error bound
+    for the request's lm_head format widens the envelope for low-precision
+    formats, which legitimately wobble more — is treated as diverged and
+    escalated exactly like a NaN.  ``max_trips_per_request`` bounds how
+    often one request may trip before the loop fails loudly instead of
+    cycling forever (a request that produces NaN even at the top mode is a
+    model/params bug, not a serving condition)."""
+
+    logit_bound: Optional[float] = None
+    max_trips_per_request: int = 5
+
+    def bound_for(self, policy: PrecisionPolicy) -> Optional[float]:
+        if self.logit_bound is None:
+            return None
+        fmt = policy.mode("lm_head")
+        if is_auto(fmt):
+            return None
+        return self.logit_bound * (1.0 + float(fmt.rel_err_bound))
+
+
+def guard_check(stat: np.ndarray, policy: PrecisionPolicy,
+                guard: Optional[GuardrailConfig]) -> np.ndarray:
+    """Per-slot verdict over the step's max-|logit| scalars: True = healthy.
+    NaN/Inf in the logits surfaces as a non-finite max (``jnp.max``
+    propagates NaNs), so one scalar per slot carries both checks."""
+    ok = np.isfinite(stat)
+    bound = guard.bound_for(policy) if guard is not None else None
+    if bound is not None:
+        ok &= ~(stat > bound)  # NaN-safe: non-finite rows already False
+    return ok
+
+
+def escalate_mode(req: ScheduledRequest) -> bool:
+    """One step UP the precision ladder after a guardrail trip (M8 -> M16 ->
+    M23), recording the original mode; returns False when the request has no
+    escalatable mode (full-policy or engine-default requests re-admit
+    unchanged — recovery still applies, the dial just has nowhere to go)."""
+    if req.policy is not None or req.mode is None:
+        return False
+    cur = getattr(req.mode, "name", None) or str(req.mode)
+    nxt = ESCALATE_CHAIN.get(cur)
+    if nxt is None:
+        return False
+    if req.escalated_from is None:
+        req.escalated_from = cur
+    req.mode = nxt
+    req.resolved_policy = None  # re-resolve at the new mode
+    return True
+
+
+def deadline_expired(req: ScheduledRequest, tick: int) -> bool:
+    """TTL check against the virtual clock; the epoch is the submit tick
+    (set by the control loop when the request enters its clock domain)."""
+    return (req.deadline_ticks is not None and req.submitted_tick >= 0
+            and tick - req.submitted_tick >= req.deadline_ticks)
 
 
 def resolve_request(req: ScheduledRequest, base: PrecisionPolicy
@@ -164,19 +259,38 @@ def table_width(pool: PagedKVPool, reqs: Sequence[ScheduledRequest]) -> int:
     return min(pow2_at_least(used), pool.max_blocks_per_seq)
 
 
+def prefill_tokens(req: ScheduledRequest) -> np.ndarray:
+    """The host-visible sequence a prefill must write: the prompt for a
+    fresh request; for a recovery re-prefill (``req.out`` non-empty after a
+    cell loss or guardrail eviction) the prompt plus every emitted token but
+    the last — exactly the positions the lost KV cache covered, since the
+    newest token's KV is only written by the decode step that consumes it."""
+    if not req.out:
+        return req.prompt
+    return np.concatenate(
+        [req.prompt, np.asarray(req.out[:-1], np.int32)])
+
+
 def prefill_request(engine, pool: PagedKVPool, req: ScheduledRequest) -> int:
     """One B=1 bucketed paged prefill: writes the request's K/V blocks into
     ``pool`` and returns the first output token (argmax of the true-last-
-    position logits).  The caller owns pushing the token / handing off."""
+    position logits).  The caller owns pushing the token / handing off.
+
+    Recovery contract: when ``req.out`` is non-empty this is a re-prefill of
+    the generated prefix (:func:`prefill_tokens`) — the caller must *discard*
+    the returned token (the already-emitted ``out[-1]`` stays the decode
+    input; under an unchanged mode the two are bit-identical anyway, under
+    an escalated mode the emitted history is immutable)."""
     policy = resolve_request(req, engine.policy)
     prefill_fn, _ = engine.paged_steps_for(policy)
-    n = len(req.prompt)
+    seq = prefill_tokens(req)
+    n = len(seq)
     s_pad = pow2_at_least(n)
     tokens = np.zeros((1, s_pad), np.int32)
-    tokens[0, :n] = req.prompt
+    tokens[0, :n] = seq
     table = pool.table_row(req.blocks)[None, :table_width(pool, [req])]
     lengths = np.zeros((1,), np.int32)
-    logits, new_k, new_v = prefill_fn(
+    logits, _stat, new_k, new_v = prefill_fn(
         engine.params, pool.k, pool.v,
         jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(tokens),
         np.int32(n - 1))
@@ -202,10 +316,20 @@ def bucket_by_policy(reqs: Sequence[ScheduledRequest],
 
 def decode_bucket_step(engine, pool: PagedKVPool,
                        reqs: Sequence[ScheduledRequest], *,
-                       max_slots: int) -> np.ndarray:
+                       max_slots: int, guard=None, injector=None,
+                       cell_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
     """One jit'd decode step for one policy bucket: builds the pow2-padded
     (table, lengths, tokens) micro-batch, runs the step, advances each
-    request's cache length, and returns the new tokens (one per request).
+    request's cache length, and returns ``(tokens, ok)`` — one new token and
+    one guardrail verdict per request.
+
+    The guardrail scalar (max |logit| per slot) comes back from the jit'd
+    step itself — the ``isfinite``/sentinel reduction is folded into the
+    step function, so policing costs no extra launch.  A False verdict means
+    the slot's logits are poisoned (NaN/Inf, a sentinel trip, or an injected
+    ``step_nan`` fault): the caller must discard that token and evict only
+    that slot.  Rows that trip do not advance ``length`` or ITL accounting —
+    the victim is re-prefilled from its host-visible prefix anyway.
 
     Inter-token latency accounting: the wall-clock gap since the request's
     previous token lands in ``req.itl`` — the per-token latency distribution
@@ -223,17 +347,24 @@ def decode_bucket_step(engine, pool: PagedKVPool,
     policy = resolve_request(reqs[0], engine.policy)
     _, decode_fn = engine.paged_steps_for(policy)
     params = engine._decode_params_for(policy)
-    logits, new_k, new_v = decode_fn(
+    logits, stat, new_k, new_v = decode_fn(
         params, pool.k, pool.v, jnp.asarray(table),
         jnp.asarray(lengths), jnp.asarray(tokens))
     pool.update(new_k, new_v)
     toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+    ok = guard_check(np.asarray(stat)[: len(reqs)], policy, guard)
+    if injector is not None:
+        for i, r in enumerate(reqs):
+            if ok[i] and injector.step_nan(cell_id, r.slot, r.rid):
+                ok[i] = False
     now = time.perf_counter()
-    for r in reqs:
+    for r, good in zip(reqs, ok):
+        if not good:
+            continue
         r.length += 1
         prev = r.t_first if not r.itl else r.t_first + sum(r.itl)
         r.itl.append(now - prev)
-    return toks[: len(reqs)]
+    return toks[: len(reqs)], ok
 
 
 # ---------------------------------------------------------------------------

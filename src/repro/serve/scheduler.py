@@ -31,6 +31,14 @@ batched (same prompt lengths), continuously scheduled while neighbors join
 and leave (tests/test_serve_scheduler.py), or split across a disaggregated
 prefill/decode engine pair (tests/test_fleet.py).
 
+Lifecycle extensions (DESIGN.md §10): requests may carry a
+``deadline_ticks`` TTL (expired requests are evicted with blocks reclaimed
+the same tick, accounted under ``expired``), may be canceled mid-flight
+(:meth:`ContinuousScheduler.cancel`), and every decode step runs the
+numerical guardrail — a slot whose logits go non-finite is evicted alone and
+re-queued at the front *escalated* one precision mode up (M8 -> M16 -> M23),
+its generated prefix re-prefilled so the stream resumes where it left off.
+
 The admission/prefill/decode-tick mechanics live in
 :mod:`repro.serve.primitives` — this class is the single-engine control loop
 over them; the multi-engine fleet (``serve/fleet/``) is another control loop
@@ -46,8 +54,12 @@ import jax.numpy as jnp
 
 from repro.serve import primitives as prim
 from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultInjector
 from repro.serve.kv_cache import BlockPoolExhausted, PagedKVPool
-from repro.serve.primitives import ScheduledRequest  # re-export  # noqa: F401
+from repro.serve.primitives import (  # re-export  # noqa: F401
+    GuardrailConfig,
+    ScheduledRequest,
+)
 
 
 class ContinuousScheduler:
@@ -66,7 +78,8 @@ class ContinuousScheduler:
 
     def __init__(self, engine: ServeEngine, *, n_blocks: int = 64,
                  block_size: int = 16,
-                 max_blocks_per_seq: Optional[int] = None):
+                 max_blocks_per_seq: Optional[int] = None,
+                 guard: Optional[GuardrailConfig] = None):
         cfg = engine.cfg
         if cfg.family not in ("dense",) or cfg.mla is not None:
             raise NotImplementedError(
@@ -82,11 +95,29 @@ class ContinuousScheduler:
         self.max_slots = engine.max_batch
         self._slots: List[Optional[ScheduledRequest]] = [None] * self.max_slots
         self._queue: Deque[ScheduledRequest] = deque()
+        self._requests: Dict[int, ScheduledRequest] = {}  # rid -> live req
         self.completed: List[ScheduledRequest] = []
+        self.expired: List[ScheduledRequest] = []
+        self.canceled: List[ScheduledRequest] = []
+        self.guard = guard or GuardrailConfig()
+        self.injector: Optional[FaultInjector] = None
         self.steps = 0              # decode steps executed (virtual clock)
         self.prefills = 0
         self.decode_token_slots = 0  # useful (non-padded) decode lanes used
         self.useful_tokens = 0
+        self.submitted = 0
+        self.guard_trip_events = 0
+        self.escalation_events = 0
+
+    def install_faults(self, plan_or_injector) -> FaultInjector:
+        """Install a fault plan (single-engine chaos: ``step_nan`` and
+        ``pool_block_corrupt`` are the seams that exist here)."""
+        inj = (plan_or_injector
+               if isinstance(plan_or_injector, FaultInjector)
+               else FaultInjector(plan_or_injector))
+        self.injector = inj
+        self.pool.fault_injector = inj
+        return inj
 
     # ---- admission ---------------------------------------------------------
     def submit(self, req: ScheduledRequest) -> None:
@@ -96,6 +127,9 @@ class ContinuousScheduler:
         prim.resolve_request(req, self.engine.policy)  # resolve + cache once
         if req.t_submit < 0:
             req.t_submit = time.perf_counter()
+        req.submitted_tick = self.steps
+        self._requests[req.rid] = req
+        self.submitted += 1
         self._queue.append(req)
 
     def _free_slot(self) -> Optional[int]:
@@ -113,6 +147,12 @@ class ContinuousScheduler:
         request stays at the queue head (its reservation was all-or-nothing,
         so nothing leaks) and retries once eviction refills the free list —
         ``run()`` still raises for a request the pool can *never* satisfy.
+
+        A *resumed* request (non-empty ``req.out``: the guardrail evicted it
+        mid-stream) re-prefills its generated prefix; the prefill's emitted
+        token is discarded — the streamed history is immutable, and under an
+        escalated mode the re-run token could differ — and decode resumes
+        consuming ``out[-1]``.
         """
         admitted = 0
         while self._queue:
@@ -127,9 +167,13 @@ class ContinuousScheduler:
             req.state = "running"
             req.admitted_step = self.steps
             self._slots[slot] = req
+            resumed = bool(req.out)
             tok = prim.prefill_request(self.engine, self.pool, req)
             self.prefills += 1
-            self._push_token(req, tok)
+            if resumed:
+                req.next_token = req.out[-1]
+            else:
+                self._push_token(req, tok)
             admitted += 1
         return admitted
 
@@ -139,32 +183,101 @@ class ContinuousScheduler:
         req.next_token = tok
         self.useful_tokens += 1
         if len(req.out) >= req.max_new or tok == req.eos_token:
-            self._evict(req)
+            self._evict(req, "done", self.completed)
 
-    def _evict(self, req: ScheduledRequest) -> None:
-        """Evict-on-EOS: return the request's blocks to the free list and
-        release its slot; the surviving slots' state is untouched, so their
-        token streams are unaffected (bit-identical — tested)."""
+    def _evict(self, req: ScheduledRequest, state: str,
+               into: List[ScheduledRequest]) -> None:
+        """Evict a slot (EOS / budget / expiry / cancel): return the blocks
+        to the free list and release the slot; the surviving slots' state is
+        untouched, so their token streams are unaffected (bit-identical —
+        tested)."""
         prim.release(self.pool, req)
         self._slots[req.slot] = None
         req.slot = None
-        req.state = "done"
+        self._retire(req, state, into)
+
+    def _retire(self, req: ScheduledRequest, state: str,
+                into: List[ScheduledRequest]) -> None:
+        req.state = state
         req.done_step = self.steps
         req.t_done = time.perf_counter()
-        self.completed.append(req)
+        self._requests.pop(req.rid, None)
+        into.append(req)
+
+    def _trip(self, req: ScheduledRequest) -> None:
+        """Guardrail eviction: poisoned token discarded, blocks freed,
+        request re-queued at the *front* escalated one mode up (its
+        generated prefix re-prefills on re-admission)."""
+        prim.release(self.pool, req)
+        self._slots[req.slot] = None
+        req.slot = None
+        req.guard_trips += 1
+        self.guard_trip_events += 1
+        if req.guard_trips > self.guard.max_trips_per_request:
+            raise RuntimeError(
+                f"request {req.rid} tripped the numerical guardrail "
+                f"{req.guard_trips} times (mode={req.mode!r}); "
+                f"escalation ladder exhausted")
+        if prim.escalate_mode(req):
+            self.escalation_events += 1
+            prim.resolve_request(req, self.engine.policy)  # re-resolve
+        req.state = "queued"
+        if req.out:
+            req.next_token = req.out[-1]
+        req.recovery_prefixes.append(len(req.out))
+        self._queue.appendleft(req)
+
+    def _sweep_deadlines(self) -> None:
+        """Expire TTL'd requests in the queue and the slot map — blocks
+        reclaimed the same tick, accounted under ``expired``."""
+        if not any(r.deadline_ticks is not None
+                   for r in self._requests.values()):
+            return
+        for req in [r for r in self._queue
+                    if prim.deadline_expired(r, self.steps)]:
+            self._queue.remove(req)
+            self._retire(req, "expired", self.expired)
+        for req in [r for r in self._slots
+                    if r is not None
+                    and prim.deadline_expired(r, self.steps)]:
+            self._evict(req, "expired", self.expired)
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request whether queued or decoding — its blocks are
+        reclaimed this tick.  Unknown / finished ids return False."""
+        req = self._requests.get(rid)
+        if req is None:
+            return False
+        if req in self._queue:
+            self._queue.remove(req)
+            self._retire(req, "canceled", self.canceled)
+            return True
+        if req.slot is not None and self._slots[req.slot] is req:
+            self._evict(req, "canceled", self.canceled)
+            return True
+        return False
 
     def step(self) -> bool:
-        """One scheduler tick: admit arrivals, then run one decode step for
-        every active policy bucket.  Returns True if any work was done."""
+        """One scheduler tick: expire deadlines, admit arrivals, then run
+        one decode step for every active policy bucket (guardrail verdicts
+        folded into each step — a tripped slot is evicted alone and
+        escalated).  Returns True if any work was done."""
+        if self.injector is not None:
+            self.injector.begin_tick(self.steps)
+        self._sweep_deadlines()
         admitted = self._admit()
         active = [r for r in self._slots if r is not None]
         buckets = prim.bucket_by_policy(active, self.engine.policy)
         for _, reqs in buckets:
-            toks = prim.decode_bucket_step(self.engine, self.pool, reqs,
-                                           max_slots=self.max_slots)
+            toks, ok = prim.decode_bucket_step(
+                self.engine, self.pool, reqs, max_slots=self.max_slots,
+                guard=self.guard, injector=self.injector, cell_id=0)
             self.decode_token_slots += len(reqs)
-            for req, tok in zip(list(reqs), toks):
-                self._push_token(req, int(tok))
+            for req, tok, good in zip(list(reqs), toks, ok):
+                if good:
+                    self._push_token(req, int(tok))
+                else:
+                    self._trip(req)
         if buckets:
             self.steps += 1
         return bool(admitted or buckets)
@@ -213,9 +326,16 @@ class ContinuousScheduler:
                if self.steps else 0.0)
         out = {"steps": self.steps, "prefills": self.prefills,
                "useful_tokens": self.useful_tokens,
+               "submitted": self.submitted,
                "completed": len(self.completed),
+               "expired": len(self.expired),
+               "canceled": len(self.canceled),
+               "guard_trips": self.guard_trip_events,
+               "escalations": self.escalation_events,
                "slot_occupancy": round(occ, 4),
                "blocks_free": self.pool.n_free,
                "blocks_live": self.pool.n_live}
+        if self.injector is not None:
+            out.update(self.injector.stats())
         out.update(prim.latency_stats(self.completed))
         return out

@@ -1,7 +1,15 @@
-"""Fault-tolerance integration tests: checkpoint/restart, NaN rollback with
-precision escalation, elastic mesh restore, straggler detection."""
+"""Fault-tolerance integration tests.
+
+Training half: checkpoint/restart, NaN rollback with precision escalation,
+elastic mesh restore, straggler detection.
+
+Serving half (DESIGN.md §10): deterministic fault plans/injectors, fleet
+cell-crash recovery with bit-parity, the numerical guardrail's
+escalate-on-NaN round trip, straggler-driven health transitions, and
+deadline/cancel lifecycle accounting in both control loops."""
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -11,6 +19,14 @@ from repro.core.policy import PrecisionPolicy
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import transformer as T
 from repro.optim import adamw
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import FaultEvent, FaultInjector, FaultPlan
+from repro.serve.fleet import FleetRouter, make_fleet
+from repro.serve.scheduler import (
+    ContinuousScheduler,
+    GuardrailConfig,
+    ScheduledRequest,
+)
 from repro.train import trainer as trainer_lib
 
 
@@ -96,6 +112,287 @@ def test_straggler_detection(tmp_path):
         trainer._watch_straggler(0.01)
     trainer._watch_straggler(0.1)
     assert trainer.straggler_events == 1
+
+
+# =========================================================================
+# serving half — fault plans & injectors (pure, no model)
+# =========================================================================
+class TestFaultPlan:
+    def test_json_roundtrip(self):
+        plan = FaultPlan.chaos(seed=7, n_cells=4, stragglers=2,
+                               corrupt_transfers=1)
+        back = FaultPlan.from_json(plan.to_json())
+        assert back == plan
+
+    def test_chaos_reproducible_and_seed_sensitive(self):
+        a = FaultPlan.chaos(seed=3, n_cells=4)
+        b = FaultPlan.chaos(seed=3, n_cells=4)
+        c = FaultPlan.chaos(seed=4, n_cells=4)
+        assert a == b
+        assert a != c
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent("disk_on_fire")
+
+    def test_events_fire_once_and_trace_is_deterministic(self):
+        plan = FaultPlan(events=[
+            FaultEvent("cell_crash", tick=2, cell=1),
+            FaultEvent("step_nan", tick=None, cell=0),
+            FaultEvent("straggler_delay", tick=1, cell=0, value=5.0)])
+
+        def drive(inj):
+            for t in range(4):
+                inj.begin_tick(t)
+                for cell in (0, 1):
+                    inj.cell_crash(cell)
+                    inj.straggler_delay(cell)
+                    inj.step_nan(cell, slot=0, rid=10 + cell)
+            return inj.trace
+
+        t1 = drive(FaultInjector(plan))
+        t2 = drive(FaultInjector(plan))
+        assert t1 == t2
+        assert [e[1] for e in t1] == ["step_nan", "straggler_delay",
+                                      "cell_crash"]
+        inj = FaultInjector(plan)
+        inj.begin_tick(2)
+        assert inj.cell_crash(1) and not inj.cell_crash(1)  # one-shot
+        assert not inj.cell_crash(0)  # wrong cell never matches
+
+    def test_tick_scoped_event_expires_silently(self):
+        inj = FaultInjector(FaultPlan(events=[
+            FaultEvent("step_nan", tick=1, cell=0)]))
+        inj.begin_tick(3)  # the scheduled tick never consulted the site
+        assert not inj.step_nan(0, slot=0, rid=0)
+        assert inj.n_fired == 0 and len(inj.unfired) == 1
+        assert inj.stats()["fault_events_unfired"] == 1
+
+
+class TestGuardVerdicts:
+    def test_guard_check_finite_and_sentinel(self):
+        from repro.serve import primitives as prim
+
+        policy = PrecisionPolicy.serve_default().overlay("M16")
+        stat = np.asarray([1.0, np.nan, np.inf, 1e9])
+        ok = prim.guard_check(stat, policy, GuardrailConfig())
+        assert ok.tolist() == [True, False, False, True]  # finite-only
+        ok = prim.guard_check(stat, policy,
+                              GuardrailConfig(logit_bound=100.0))
+        assert ok.tolist() == [True, False, False, False]  # sentinel too
+
+    def test_escalate_mode_ladder(self):
+        from repro.serve import primitives as prim
+
+        req = ScheduledRequest(rid=0, prompt=np.asarray([1], np.int32),
+                               mode="M8")
+        assert prim.escalate_mode(req) and req.mode == "M16"
+        assert prim.escalate_mode(req) and req.mode == "M23"
+        assert req.escalated_from == "M8"  # original, not intermediate
+        assert not prim.escalate_mode(req)  # top of the ladder
+        bare = ScheduledRequest(rid=1, prompt=np.asarray([1], np.int32))
+        assert not prim.escalate_mode(bare)  # engine-default: no dial
+
+
+# =========================================================================
+# serving half — fleet recovery and guardrails (model-backed)
+# =========================================================================
+SERVE_CFG = get_config("paper-mpfp-100m", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def serve_params():
+    return T.init_params(SERVE_CFG, jax.random.PRNGKey(0))
+
+
+def _serve_engine(params, max_batch=4):
+    return ServeEngine(SERVE_CFG, params, max_batch=max_batch, max_seq=64,
+                       policy=PrecisionPolicy.serve_default())
+
+
+def _serve_reqs(seed=0, n=6, max_new=6, modes=("M8", "M16"), **kw):
+    rng = np.random.default_rng(seed)
+    return [ScheduledRequest(
+        rid=i,
+        prompt=rng.integers(0, SERVE_CFG.vocab,
+                            size=int(rng.integers(2, 9))).astype(np.int32),
+        max_new=int(rng.integers(3, max_new + 1)),
+        mode=modes[i % len(modes)] if modes else None,
+        arrival=i // 2, **kw)
+        for i in range(n)]
+
+
+def _outs(done):
+    return {r.rid: r.out for r in done}
+
+
+class TestFleetRecovery:
+    def test_cell_crash_recovery_bit_parity(self, serve_params):
+        """Kill a cell mid-stream: every request still completes; requests
+        the crash never touched are bit-identical to the no-fault run, and
+        each victim's streamed history (prefix before re-admission) is
+        preserved exactly with the regenerated suffix bit-identical to a
+        structurally-faithful solo re-run (a *resumed* request — re-prefix
+        then decode, the same computation recovery ran).  The suffix is not
+        compared against the no-fault run: its prefix K/V is prefill-built
+        where the baseline's was decode-built, and that low-bit difference
+        may flip a tight greedy argmax."""
+        eng = _serve_engine(serve_params)
+        base = FleetRouter(make_fleet(eng, 2, n_blocks=33, block_size=8))
+        want = _outs(base.run(_serve_reqs()))
+
+        plan = FaultPlan(events=[FaultEvent("cell_crash", tick=2, cell=1)])
+        router = FleetRouter(make_fleet(eng, 2, n_blocks=33, block_size=8),
+                             fault_plan=plan)
+        done = router.run(_serve_reqs())
+        stats = router.stats()
+        outs = _outs(done)
+        victims = [r for r in done if r.recovery_prefixes]
+        assert victims
+        for r in done:
+            if not r.recovery_prefixes:
+                assert outs[r.rid] == want[r.rid]
+        for v in victims:
+            k0 = v.recovery_prefixes[0]
+            assert v.out[:k0] == want[v.rid][:k0]  # history immutable
+            k = v.recovery_prefixes[-1]
+            solo = ScheduledRequest(rid=99, prompt=np.asarray(
+                v.prompt, np.int32), max_new=v.max_new, mode=v.mode)
+            solo.out = list(v.out[:k])
+            sched = ContinuousScheduler(eng, n_blocks=17, block_size=8)
+            sched.run([solo])
+            assert v.out[k:] == solo.out[k:]
+        assert stats["cell_deaths"] == 1
+        assert stats["cell_states"][1] == "dead"
+        assert stats["recovered_requests"] >= 1
+        assert any(r.recoveries for r in done)
+        assert stats["blocks_live"] == 0  # dead cell's blocks reclaimed too
+        assert stats["pending_handoffs"] == 0
+        assert stats["fault_events_unfired"] == 0
+
+    def test_step_nan_escalates_and_matches_solo_rerun(self, serve_params):
+        """A poisoned decode step evicts exactly one slot; the victim
+        re-admits one mode up and its regenerated suffix equals a solo run
+        of its prefix at the escalated mode."""
+        eng = _serve_engine(serve_params)
+        plan = FaultPlan(events=[FaultEvent("step_nan", tick=None, cell=0)])
+        router = FleetRouter(make_fleet(eng, 1, n_blocks=33, block_size=8),
+                             fault_plan=plan)
+        done = router.run(_serve_reqs(n=4, modes=("M8",), max_new=6))
+        victims = [r for r in done if r.guard_trips]
+        assert len(victims) == 1
+        v = victims[0]
+        assert v.escalated_from == "M8" and v.mode == "M16"
+        assert len(v.out) == v.max_new
+        assert router.stats()["escalations"] == 1
+
+        k = v.recovery_prefixes[-1]
+        solo = ScheduledRequest(rid=99, prompt=np.asarray(v.prompt, np.int32),
+                                max_new=v.max_new, mode="M16")
+        solo.out = list(v.out[:k])  # resumed: same re-prefix computation
+        sched = ContinuousScheduler(eng, n_blocks=17, block_size=8)
+        sched.run([solo])
+        assert v.out[k:] == solo.out[k:]
+
+    def test_straggler_drives_degrade_then_quarantine(self, serve_params):
+        """Injected virtual delays trip the EWMA: the cell degrades, then
+        quarantines (draining its work), then serves again after probation
+        — with every request still completing."""
+        eng = _serve_engine(serve_params)
+        plan = FaultPlan(events=[
+            FaultEvent("straggler_delay", tick=t, cell=1, value=100.0)
+            for t in (4, 5, 6)])
+        router = FleetRouter(
+            make_fleet(eng, 2, n_blocks=33, block_size=8), fault_plan=plan,
+            health_kwargs=dict(min_samples=2, degrade_after=1,
+                               quarantine_after=2, probation_ticks=3))
+        done = router.run(_serve_reqs(n=8, max_new=8))
+        stats = router.stats()
+        assert len(done) == 8
+        assert stats["straggler_events"] >= 2
+        assert stats["cell_deaths"] == 0
+        assert stats["cell_states"][1] in ("degraded", "quarantined")
+
+    def test_guardrail_exhaustion_fails_loudly(self, serve_params):
+        """A request that trips past max_trips_per_request raises instead
+        of cycling forever (engine-default mode: no escalation possible)."""
+        eng = _serve_engine(serve_params)
+        plan = FaultPlan(events=[
+            FaultEvent("step_nan", tick=None, cell=0) for _ in range(4)])
+        router = FleetRouter(
+            make_fleet(eng, 1, n_blocks=33, block_size=8), fault_plan=plan,
+            guard=GuardrailConfig(max_trips_per_request=2))
+        with pytest.raises(RuntimeError, match="guardrail"):
+            router.run(_serve_reqs(n=1, modes=None, max_new=8))
+
+
+class TestServeLifecycle:
+    def test_scheduler_deadline_expiry_accounting(self, serve_params):
+        """A TTL'd request is evicted mid-decode with its blocks reclaimed
+        the same tick; neighbors and stats are unaffected."""
+        eng = _serve_engine(serve_params)
+        sched = ContinuousScheduler(eng, n_blocks=17, block_size=8)
+        reqs = _serve_reqs(n=3, modes=None, max_new=6)
+        reqs[1].deadline_ticks = 2
+        reqs[1].max_new = 40  # would never finish inside the TTL
+        done = sched.run(reqs)
+        stats = sched.stats()
+        assert {r.rid for r in done} == {0, 2}
+        assert stats["expired"] == 1 and stats["completed"] == 2
+        assert sched.expired[0].rid == 1
+        assert sched.expired[0].state == "expired"
+        assert len(sched.expired[0].out) <= 3  # cut short, not served out
+        assert stats["blocks_live"] == 0
+
+    def test_router_deadline_expiry_accounting(self, serve_params):
+        eng = _serve_engine(serve_params)
+        router = FleetRouter(make_fleet(eng, 2, n_blocks=33, block_size=8))
+        reqs = _serve_reqs(n=4, max_new=6)
+        reqs[2].deadline_ticks = 2
+        reqs[2].max_new = 40
+        done = router.run(reqs)
+        stats = router.stats()
+        assert {r.rid for r in done} == {0, 1, 3}
+        assert stats["expired"] == 1 and stats["completed"] == 3
+        assert stats["blocks_live"] == 0 and stats["pending_handoffs"] == 0
+        # expired requests still fan out to their submitter, tagged
+        assert {r.rid: r.state for r in router.drain()}[2] == "expired"
+
+    def test_scheduler_cancel_lifecycle(self, serve_params):
+        eng = _serve_engine(serve_params)
+        sched = ContinuousScheduler(eng, n_blocks=17, block_size=8)
+        reqs = _serve_reqs(n=3, modes=None, max_new=8)
+        for r in reqs:
+            sched.submit(r)
+        assert sched.cancel(999) is False          # unknown id
+        assert sched.cancel(reqs[2].rid) is True   # still queued
+        sched.step()
+        assert sched.cancel(reqs[0].rid) is True   # mid-decode
+        assert sched.cancel(reqs[0].rid) is False  # already retired
+        sched.run()
+        stats = sched.stats()
+        assert stats["canceled"] == 2 and stats["completed"] == 1
+        assert stats["blocks_live"] == 0
+        assert {r.state for r in sched.canceled} == {"canceled"}
+
+    def test_router_cancel_lifecycle(self, serve_params):
+        eng = _serve_engine(serve_params)
+        router = FleetRouter(make_fleet(eng, 2, n_blocks=33, block_size=8))
+        reqs = _serve_reqs(n=4, max_new=8)
+        for r in reqs:
+            r.arrival = 0
+            router.submit(r)
+        assert router.cancel(999) is False        # unknown id
+        assert router.cancel(reqs[3].rid) is True  # queued in the backlog
+        router.step()
+        router.step()
+        assert router.cancel(reqs[0].rid) is True  # in-flight on a cell
+        assert router.cancel(reqs[0].rid) is False
+        router.run()
+        stats = router.stats()
+        assert stats["canceled"] == 2 and stats["completed"] == 2
+        assert stats["blocks_live"] == 0
+        assert stats["submitted"] == 4
 
 
 def test_microbatch_accumulation_matches_full_batch(tmp_path):

@@ -160,6 +160,109 @@ class TestCrossPoolHandoff:
         assert not deliver(KVHandoff(req=req, src_pool=src), dst)
         assert src.n_live == 2  # handoff untouched, blocks still in src
 
+    def test_deliver_injected_transfer_fail_is_side_effect_free(self):
+        """An injected handoff_transfer_fail fires before any allocation:
+        the handoff stays valid against its source pool and the next
+        attempt (event spent) succeeds — the park-and-retry contract."""
+        from repro.serve.faults import FaultEvent, FaultInjector, FaultPlan
+
+        src, dst = self._pool(), self._pool()
+        req = ScheduledRequest(rid=0, prompt=np.arange(4, dtype=np.int32),
+                               max_new=4)
+        req.blocks = src.alloc(2)
+        inj = FaultInjector(FaultPlan(events=[
+            FaultEvent("handoff_transfer_fail")]))
+        h = KVHandoff(req=req, src_pool=src, src_cell=0)
+        assert not deliver(h, dst, injector=inj, dst_cell=1)
+        assert src.n_live == 2 and dst.n_live == 0  # nothing moved
+        assert h.src_pool is src
+        assert deliver(h, dst, injector=inj, dst_cell=1)  # one-shot fault
+        assert dst.n_live == 2
+
+    def test_injected_block_corrupt_lands_nan_in_destination(self):
+        """pool_block_corrupt poisons the first transferred block — the
+        payload the decode guardrail must catch downstream."""
+        from repro.serve.faults import FaultEvent, FaultInjector, FaultPlan
+
+        src, dst = self._pool(), self._pool()
+        sb, db = src.alloc(2), dst.alloc(2)
+        dst.fault_injector = FaultInjector(FaultPlan(events=[
+            FaultEvent("pool_block_corrupt")]))
+        src.transfer_blocks(dst, sb, db)
+        assert bool(jnp.all(jnp.isnan(dst.k[:, db[0]])))
+        assert not bool(jnp.any(jnp.isnan(dst.k[:, db[1]])))
+
+
+# =========================================================================
+# pool negative paths: the free list must fail loudly, never corrupt
+# =========================================================================
+class TestPoolNegativePaths:
+    def _pool(self, n_blocks=8, max_per_seq=4):
+        return PagedKVPool(2, n_blocks, 4, CFG.n_kv_heads,
+                           CFG.resolved_head_dim,
+                           max_blocks_per_seq=max_per_seq)
+
+    def test_double_free_and_foreign_free_rejected(self):
+        pool = self._pool()
+        blocks = pool.alloc(2)
+        pool.free(blocks)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(blocks)  # already returned
+        with pytest.raises(ValueError, match="double free|foreign"):
+            pool.free([5])  # never allocated
+        with pytest.raises(ValueError, match="trash"):
+            pool.free([0])
+        assert pool.n_free == 7 and pool.n_live == 0  # accounting intact
+
+    def test_transfer_rejects_block_count_mismatch(self):
+        src, dst = self._pool(), self._pool()
+        sb, db = src.alloc(2), dst.alloc(3)
+        with pytest.raises(ValueError, match="count mismatch"):
+            src.transfer_blocks(dst, sb, db)
+
+    def test_try_alloc_respects_per_seq_cap_and_exhaustion(self):
+        pool = self._pool(n_blocks=8, max_per_seq=4)
+        assert pool.try_alloc(5) is None      # over max_blocks_per_seq
+        assert pool.try_alloc(4) is not None  # 3 free left
+        assert pool.try_alloc(4) is None      # exhausted, all-or-nothing
+        assert pool.n_free == 3               # failed attempts took nothing
+        with pytest.raises(BlockPoolExhausted, match="free list has 3"):
+            pool.alloc(4)
+
+    def test_try_alloc_thread_hammering_never_double_allocates(self):
+        """Many threads racing try_alloc/free: no block may ever be handed
+        to two owners, and the free list must balance when the dust
+        settles — the lock-guarded accounting the fleet's shared-pool
+        engines rely on."""
+        import threading
+
+        pool = self._pool(n_blocks=33, max_per_seq=8)
+        seen_twice, lock = [], threading.Lock()
+        held: set = set()
+
+        def hammer(seed):
+            rng = np.random.default_rng(seed)
+            for _ in range(200):
+                got = pool.try_alloc(int(rng.integers(1, 5)))
+                if got is None:
+                    continue
+                with lock:
+                    dup = [b for b in got if b in held]
+                    seen_twice.extend(dup)
+                    held.update(got)
+                with lock:
+                    held.difference_update(got)
+                pool.free(got)
+
+        threads = [threading.Thread(target=hammer, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not seen_twice  # no block ever had two owners
+        assert pool.n_free == 32 and pool.n_live == 0
+
 
 # =========================================================================
 # router placement policies
