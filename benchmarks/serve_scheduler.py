@@ -10,6 +10,13 @@ its KV blocks immediately — the slot-occupancy gap is the speedup.
 
     PYTHONPATH=src python -m benchmarks.serve_scheduler --json-out BENCH_serve.json
     PYTHONPATH=src python -m benchmarks.serve_scheduler --soak   # CI invariants
+    PYTHONPATH=src python -m benchmarks.serve_scheduler --mixed  # lane row
+
+``--mixed`` adds the partitioned-lane row: a four-mode Poisson workload
+served by the shape-bucketed plan (ONE decode launch per tick) vs the legacy
+per-format-bucket plan, bit-identical tokens asserted, launches-per-tick and
+the tokens/s ratio reported (CI gates the ratio at >= 1 — the single launch
+must at least pay for its envelope-depth padding).
 
 Both paths are warmed once (all jit traces compiled) before timing, so the
 comparison is steady-state serving throughput, not compile time.
@@ -17,6 +24,7 @@ comparison is steady-state serving throughput, not compile time.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
@@ -24,10 +32,22 @@ import numpy as np
 import jax
 
 from repro.configs.registry import get_config
+from repro.core import formats as formats_lib
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
+from repro.serve import primitives as prim
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
+
+# the four-mode QoS rotation the soak and the mixed row serve: the three
+# paper serving modes plus a run-time registered custom format (which also
+# exercises the registry escalation rung)
+FOUR_MODES = ("M8", "M16", "M23", "M12QOS")
+
+
+def _register_custom() -> None:
+    formats_lib.register_format(
+        "M12QOS", mantissa_bits=12, n_limbs=2, max_order=1)
 
 
 def build_requests(seed: int, n: int, vocab: int, *, max_new_hi: int = 24,
@@ -89,9 +109,27 @@ def run_scheduled(eng: ServeEngine, reqs, *, n_blocks: int,
             "tokens_per_s": stats["useful_tokens"] / dt,
             "steps": stats["steps"],
             "slot_occupancy": stats["slot_occupancy"],
+            "decode_launches": stats["decode_launches"],
+            "launches_per_tick": stats["launches_per_tick"],
             "latency": {k: v for k, v in stats.items()
                         if "_p50_" in k or "_p95_" in k},
             "outs": {r.rid: r.out for r in done}}
+
+
+@contextlib.contextmanager
+def legacy_bucket_plan():
+    """Swap the tick planner back to one-launch-per-format bucketing — the
+    pre-partitioned-lane behavior the mixed row benchmarks against."""
+    orig = prim.decode_tick_plan
+
+    def per_policy(reqs, base):
+        return [("bucket", g) for _, g in prim.bucket_by_policy(reqs, base)]
+
+    prim.decode_tick_plan = per_policy
+    try:
+        yield
+    finally:
+        prim.decode_tick_plan = orig
 
 
 def bench(args) -> dict:
@@ -132,10 +170,62 @@ def bench(args) -> dict:
     return result
 
 
+def bench_mixed(args) -> dict:
+    """The partitioned-lane row: a four-mode Poisson workload through the
+    shape-bucketed plan (one mixed launch per tick) vs the legacy per-format
+    buckets.  Tokens must be bit-identical between the plans — the single
+    launch is a launch-count optimization, not a numerics change."""
+    _register_custom()
+    cfg = get_config(args.arch, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=args.slots,
+                      max_seq=args.max_seq,
+                      policy=PrecisionPolicy.serve_default())
+    n_blocks = 1 + args.slots * (
+        -(-(20 + args.max_new_hi) // args.block_size) + 1)
+    mk = lambda: build_requests(args.seed, args.requests, cfg.vocab,
+                                max_new_hi=args.max_new_hi,
+                                modes=FOUR_MODES)
+    kw = dict(n_blocks=n_blocks, block_size=args.block_size)
+    # warm both plans' traces on the shared engine, then time fresh runs
+    run_scheduled(eng, mk(), **kw)
+    with legacy_bucket_plan():
+        run_scheduled(eng, mk(), **kw)
+
+    mixed = run_scheduled(eng, mk(), **kw)
+    with legacy_bucket_plan():
+        bucketed = run_scheduled(eng, mk(), **kw)
+
+    assert mixed["outs"] == bucketed["outs"], \
+        "mixed-plan tokens diverged from the per-bucket plan"
+    assert mixed["launches_per_tick"] == 1.0, \
+        f"mixed plan issued {mixed['launches_per_tick']} launches/tick"
+    ratio = mixed["tokens_per_s"] / bucketed["tokens_per_s"]
+    result = {
+        "arch": cfg.name, "requests": args.requests, "slots": args.slots,
+        "modes": list(FOUR_MODES),
+        "mixed_tokens_per_s": round(mixed["tokens_per_s"], 1),
+        "bucketed_tokens_per_s": round(bucketed["tokens_per_s"], 1),
+        "mixed_vs_bucketed": round(ratio, 3),
+        "mixed_launches_per_tick": mixed["launches_per_tick"],
+        "bucketed_launches_per_tick": bucketed["launches_per_tick"],
+        "mixed_decode_launches": mixed["decode_launches"],
+        "bucketed_decode_launches": bucketed["decode_launches"],
+        "backend": "ref", "device": jax.default_backend(),
+    }
+    print(json.dumps(result, indent=1))
+    return result
+
+
 def soak(args) -> None:
-    """CI soak: 64 Poisson requests with mixed per-request modes through a
-    deliberately tight pool — asserts the free-list and slot-map invariants
-    the scheduler guarantees (no slot/block leak, monotone completions)."""
+    """CI soak: 64 Poisson requests over the four-mode QoS rotation through
+    a deliberately tight pool — asserts the free-list and slot-map
+    invariants the scheduler guarantees (no slot/block leak, monotone
+    completions) plus the partitioned-lane launch discipline: static-format
+    traffic rides ONE decode launch per tick regardless of the mode mix,
+    and no decode tick re-traces after warmup (mid-stream mode joins reuse
+    the batch-max envelope trace)."""
+    _register_custom()
     cfg = get_config(args.arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_batch=args.slots,
@@ -147,7 +237,7 @@ def soak(args) -> None:
     sched = ContinuousScheduler(eng, n_blocks=1 + args.slots * per_req,
                                 block_size=args.block_size)
     reqs = build_requests(args.seed, 64, cfg.vocab,
-                          max_new_hi=args.max_new_hi, mixed_modes=True)
+                          max_new_hi=args.max_new_hi, modes=FOUR_MODES)
     done = sched.run(reqs)
 
     assert len(done) == 64, f"lost requests: {len(done)}/64"
@@ -159,8 +249,26 @@ def soak(args) -> None:
     for r in done:
         assert len(r.out) == r.max_new, (r.rid, len(r.out), r.max_new)
         assert r.admitted_step >= r.arrival
+    stats = sched.stats()
+    assert stats["launches_per_tick"] == 1.0, \
+        f"four-mode mix took {stats['launches_per_tick']} launches/tick"
+    # mode joins mid-stream must be cache hits, never evictions/re-traces:
+    # a second identical soak on the warmed engine compiles nothing new
+    traces = eng.trace_events
+    sched2 = ContinuousScheduler(eng, n_blocks=1 + args.slots * per_req,
+                                 block_size=args.block_size)
+    done2 = sched2.run(build_requests(args.seed, 64, cfg.vocab,
+                                      max_new_hi=args.max_new_hi,
+                                      modes=FOUR_MODES))
+    assert eng.trace_events == traces, "decode re-traced on a warm engine"
+    assert {r.rid: r.out for r in done2} == {r.rid: r.out for r in done}, \
+        "warm re-run tokens diverged"
     print(f"soak OK: 64 requests, {sched.steps} steps, "
-          f"occupancy {sched.stats()['slot_occupancy']}")
+          f"occupancy {stats['slot_occupancy']}, "
+          f"launches/tick {stats['launches_per_tick']}, "
+          f"traces {eng.trace_events} "
+          f"(prelimb hits/misses {eng.prelimb_cache_hits}/"
+          f"{eng.prelimb_cache_misses})")
 
 
 def main():
@@ -174,12 +282,29 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default="")
     ap.add_argument("--soak", action="store_true")
+    ap.add_argument("--mixed", action="store_true",
+                    help="run the partitioned-lane four-mode row instead "
+                         "of the scheduled-vs-static row")
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail unless scheduled/static tokens-per-s ratio "
+                         "reaches this (CI gate; 0 = record only)")
+    ap.add_argument("--min-mixed-speedup", type=float, default=0.0,
+                    help="fail unless mixed/bucketed tokens-per-s ratio "
                          "reaches this (CI gate; 0 = record only)")
     args = ap.parse_args()
     if args.soak:
         soak(args)
+        return
+    if args.mixed:
+        result = bench_mixed(args)
+        if args.json_out:
+            with open(args.json_out, "w") as f:
+                json.dump(result, f, indent=1)
+        if (args.min_mixed_speedup
+                and result["mixed_vs_bucketed"] < args.min_mixed_speedup):
+            raise SystemExit(
+                f"mixed-plan speedup {result['mixed_vs_bucketed']} < "
+                f"{args.min_mixed_speedup}")
         return
     result = bench(args)
     if args.json_out:

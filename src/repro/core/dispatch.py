@@ -495,6 +495,179 @@ def masked_decode_attention(
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# partitioned-lane mixed-format decode (one launch, per-slot formats)
+# ---------------------------------------------------------------------------
+def _lane_cols(lane, ndim: int) -> jax.Array:
+    """Reshape a per-slot (B,) lane array to broadcast over a (B, ..., N)
+    operand — lane values apply row-wise (every position/head of a slot
+    shares that slot's format)."""
+    lane = jnp.asarray(lane, jnp.int32).reshape(-1)
+    return lane.reshape((lane.shape[0],) + (1,) * (ndim - 1))
+
+
+def dispatch_mixed_matmul(
+    a: jax.Array,
+    b: Operand,
+    env: FormatLike,
+    lane_n: jax.Array,
+    lane_ord: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Route one partitioned-lane matmul: ``a`` (B, ..., K) whose slots run
+    at per-lane ``(n_limbs, max_order)`` ≤ the static ``env`` envelope,
+    against one 2-D weight (raw or pre-limbed).  ``lane_n`` / ``lane_ord``
+    are per-slot (B,) int32 traced arrays.
+
+    pallas backends run the lane-masked pre-limbed kernel
+    (``ops.mp_mixed_matmul_pallas``); every other backend runs the masked
+    ref oracle.  Both realizations share ``kernels/ref.lane_keep`` and the
+    per-lane accumulation-discipline select, so the kept product set is
+    defined exactly once.  Inference-only (decode never differentiates).
+    """
+    name = backend or context_lib.current_context().backend
+    env = resolve(env)
+    if name in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as pallas_backend  # deferred: pallas
+
+        interpret = name == "pallas_interpret" or jax.default_backend() == "cpu"
+        return pallas_backend.mp_mixed_matmul_pallas(
+            a, b, env, lane_n, lane_ord, out_dtype=out_dtype,
+            interpret=interpret)
+    # ref / sharded / extension backends: the masked oracle.  (sharded: a
+    # decode micro-batch's M dim is a handful of rows; K-sharding the
+    # lane-masked cascade would pay a per-order psum for no MXU win, so the
+    # mixed path makes the same local-compute call the homogeneous decode
+    # projections do.)
+    return ref_backend.masked_matmul_ref(
+        a, b, env, _lane_cols(lane_n, a.ndim), _lane_cols(lane_ord, a.ndim),
+        out_dtype=out_dtype)
+
+
+def mixed_fused_proj(
+    x: jax.Array,
+    ws,
+    env: FormatLike,
+    lane_n: jax.Array,
+    lane_ord: jax.Array,
+    *,
+    epilogue: str = "none",
+    biases=None,
+    residual=None,
+    backend: Optional[str] = None,
+    out_dtype=jnp.float32,
+):
+    """Partitioned-lane projection group: per-branch mixed matmuls plus the
+    shared epilogue — the lane analogue of ``mpmatmul._sequential_fused``.
+    Decode projections hit pre-limbed weights, so per-branch calls ARE the
+    homogeneous decode discipline already (no A-sharing kernel to mirror);
+    the epilogue math is byte-for-byte the homogeneous helper."""
+    raws = [dispatch_mixed_matmul(x, w, env, lane_n, lane_ord,
+                                  backend=backend, out_dtype=jnp.float32)
+            for w in ws]
+    return ref_backend.apply_epilogue(raws, gate=epilogue, biases=biases,
+                                      residual=residual, out_dtype=out_dtype)
+
+
+def mixed_masked_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    lengths,
+    env_qk: FormatLike,
+    env_pv: FormatLike,
+    lane_qk_n: jax.Array,
+    lane_qk_ord: jax.Array,
+    lane_pv_n: jax.Array,
+    lane_pv_ord: jax.Array,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Lane-masked realization of :func:`masked_decode_attention`: q
+    (B, 1, H, Dh) against k/v (B, T, H, Dh) (H already repeated), each slot
+    running both attention einsums at its own format under the static
+    envelopes.  Same mask/softmax/re-zero bookkeeping as the homogeneous
+    path; the contractions go through the masked ref helpers so the kept
+    product set matches the Pallas mixed paged kernel limb for limb."""
+    B, S1, H, Dh = q.shape
+    T = k.shape[1]
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dh))
+    qh = q.transpose(0, 2, 1, 3).astype(jnp.float32) * scale  # (B, H, 1, Dh)
+    kh = k.transpose(0, 2, 1, 3).astype(jnp.float32)          # (B, H, T, Dh)
+    vh = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    # QK through masked_matmul_ref on the PRE-transposed k — mirroring the
+    # homogeneous path's mp_einsum_qk (decompose-after-swapaxes), because
+    # XLA's contraction order differs at the ulp between A@B and A@Bᵀ
+    # layouts; the NT-form helper (masked_attn_qk_logits) is for the Pallas
+    # kernels, whose homogeneous twin uses the NT form on VMEM tiles
+    logits = ref_backend.masked_matmul_ref(
+        qh, jnp.swapaxes(kh, -1, -2), resolve(env_qk),
+        _lane_cols(lane_qk_n, 4), _lane_cols(lane_qk_ord, 4))  # (B, H, 1, T)
+    ln = lengths.reshape(-1, 1, 1, 1) if getattr(lengths, "ndim", 0) \
+        else lengths
+    mask = jnp.arange(T)[None, None, None, :] < ln
+    logits = jnp.where(mask, logits, ref_backend.ATTN_NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = ref_backend.masked_attn_pv(
+        p, vh, resolve(env_pv), _lane_cols(lane_pv_n, 4),
+        _lane_cols(lane_pv_ord, 4))                            # (B, H, 1, Dh)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def dispatch_mixed_paged_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    env_qk: FormatLike,
+    env_pv: FormatLike,
+    lane_qk_n: jax.Array,
+    lane_qk_ord: jax.Array,
+    lane_pv_n: jax.Array,
+    lane_pv_ord: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Route one partitioned-lane paged-decode attention step: q
+    (B, 1, H, Dh) against the block pool through per-slot block tables,
+    with per-slot QK / PV formats under the static envelopes.
+
+    pallas / pallas_interpret run the mixed paged kernel — the lane table
+    rides the scalar-prefetch channel next to the block table, so one
+    launch serves every format in the batch.  Every other backend falls
+    back to the bounded gather + lane-masked einsum path.  AUTO never
+    reaches here: ``lanes.lanes_eligible`` keeps AUTO policies on the
+    per-policy bucket path."""
+    name = backend or context_lib.current_context().backend
+    B, S1, H, Dh = q.shape
+    n_blocks, bs, hk, _ = k_pool.shape
+    n_rep = H // hk
+    if name in ("pallas", "pallas_interpret"):
+        from repro.kernels import mp_attention as attn_kernels
+
+        interpret = name == "pallas_interpret" or jax.default_backend() == "cpu"
+        out = attn_kernels.mp_mixed_paged_attention_pallas(
+            q.reshape(B, H, Dh), k_pool, v_pool, block_table, lengths,
+            env_qk, env_pv, lane_qk_n, lane_qk_ord, lane_pv_n, lane_pv_ord,
+            scale=scale, interpret=interpret)
+        return out.reshape(B, S1, H, Dh).astype(q.dtype)
+    W = block_table.shape[1]
+    kk = k_pool[block_table].reshape(B, W * bs, hk, Dh)
+    vv = v_pool[block_table].reshape(B, W * bs, hk, Dh)
+    if n_rep > 1:
+        kk = jnp.repeat(kk, n_rep, axis=2)
+        vv = jnp.repeat(vv, n_rep, axis=2)
+    return mixed_masked_decode_attention(
+        q, kk, vv, lengths, env_qk, env_pv, lane_qk_n, lane_qk_ord,
+        lane_pv_n, lane_pv_ord, scale=scale)
+
+
 def dispatch_paged_attention(
     q: jax.Array,
     k_pool: jax.Array,

@@ -214,6 +214,13 @@ def available_formats() -> Tuple[str, ...]:
     return tuple(_FORMATS)
 
 
+def builtin_formats() -> Tuple[str, ...]:
+    """Names of the immutable builtin ladder (M8..M52) — callers that treat
+    custom registered formats differently (e.g. the serving escalation
+    ladder) key off this set."""
+    return tuple(sorted(_BUILTIN_NAMES))
+
+
 def format_def(fmt: MPFormat) -> Dict[str, object]:
     """Wire-form definition of a format (the payload ``register_format``
     accepts back) — policies/contexts embed these so JSON payloads that

@@ -1,0 +1,163 @@
+"""Partitioned-lane mixed-format decode: one launch, per-slot precision.
+
+The paper's datapath reconfigures per *operand* at run time; the serving
+analogue is a decode micro-batch whose slots carry different precision
+policies.  Instead of fragmenting the batch into per-format buckets (one
+jit'd launch each), the mixed path runs every slot ("lane") inside ONE
+launch at the batch-max limb depth and masks the higher limb products and
+orders off per lane — the dynamically partitioned SIMD datapath of
+`ieee754fpu`'s ``part*`` modules (one wide ALU splitting into runtime-width
+lanes) lifted to the limb-cascade matmuls.
+
+Three pieces live here:
+
+* :class:`LaneEnvelope` — the static per-op-class ``(n_limbs, max_order)``
+  ceiling of a batch.  It keys the engine's mixed-step trace cache: two
+  batches with the same envelope (and shapes) share a trace regardless of
+  which formats sit in which lane, so a mode joining mid-stream never
+  re-traces as long as it fits under the envelope.
+* the lane tables — dynamic ``(C, B)`` int32 arrays of per-slot
+  ``n_limbs`` / ``max_order`` per op class, passed as traced step inputs.
+* :class:`LaneCtx` + the ``lane_scope`` contextvar — how the per-lane data
+  reaches the model's projection/attention call sites without threading a
+  new argument through every layer signature (the same trace-scoped
+  pattern as ``dispatch.pin_backend``).
+
+The masking *math* (which limb products a lane keeps, and the two
+accumulation disciplines) is in ``kernels/ref.py`` —
+:func:`repro.kernels.ref.lane_keep` / :func:`masked_matmul_limbs` — so the
+ref oracle and the Pallas kernels share one realization of it.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from functools import lru_cache
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.formats import MPFormat, is_auto, resolve
+
+# Op classes a decode step resolves per lane — the row order of the lane
+# tables.  ``attn_qk``/``attn_pv`` resolve through the policy's aliases
+# (``attn_logits``/``attn_out``) exactly as the homogeneous path does.
+DECODE_OP_CLASSES: Tuple[str, ...] = (
+    "qkv", "attn_qk", "attn_pv", "attn_out", "ffn", "lm_head")
+
+_CLASS_INDEX = {c: i for i, c in enumerate(DECODE_OP_CLASSES)}
+
+# Lane value for padded (trash) slots: 1 limb, order 0 — the cheapest legal
+# format.  Padded rows compute garbage into sliced-off outputs either way.
+PAD_LANE = (1, 0)
+
+
+@lru_cache(maxsize=None)
+def envelope_format(n_limbs: int, max_order: int) -> MPFormat:
+    """Synthesize the (unregistered) format a mixed launch computes at.
+
+    Two incomparable lane formats — say (3 limbs, order 1) and (2 limbs,
+    order 2) — have a componentwise envelope matching no registered format,
+    so the envelope is minted directly rather than looked up.  Only
+    ``n_limbs``/``max_order`` (the product set) matter to the kernels;
+    ``mantissa_bits``/``rel_err_bound`` are nominal.
+    """
+    return MPFormat(f"LANE_ENV_{n_limbs}_{max_order}",
+                    mantissa_bits=8 * n_limbs, n_limbs=n_limbs,
+                    max_order=max_order)
+
+
+class LaneEnvelope(NamedTuple):
+    """Per-op-class componentwise max of (n_limbs, max_order) over a batch.
+
+    Hashable and static: it is the trace-cache key for mixed decode steps
+    (``ServeEngine.mixed_decode_step_for``).  Every lane's product set
+    ``{(i, j): i, j < n, i + j <= ord}`` is a subset of its envelope's, and
+    the lane's products form a *subsequence* of the envelope's descending-
+    order product sequence — the property the masked accumulation relies on.
+    """
+
+    limbs: Tuple[int, ...]    # len == len(DECODE_OP_CLASSES)
+    orders: Tuple[int, ...]
+
+    def fmt(self, op_class: str) -> MPFormat:
+        i = _CLASS_INDEX[op_class]
+        return envelope_format(self.limbs[i], self.orders[i])
+
+    @property
+    def max_limbs(self) -> int:
+        """Batch-max limb depth — keys the prelimbed-weight cache."""
+        return max(self.limbs)
+
+
+class LaneCtx(NamedTuple):
+    """The per-trace lane context: static envelope + dynamic lane tables.
+
+    ``lane_n`` / ``lane_ord`` are (C, B) int32 *traced* arrays (C indexes
+    :data:`DECODE_OP_CLASSES`, B is the micro-batch).  Constructed inside
+    the traced mixed decode step and installed with :func:`lane_scope`.
+    """
+
+    env: LaneEnvelope
+    lane_n: Any      # (C, B) int32
+    lane_ord: Any    # (C, B) int32
+
+    def for_class(self, op_class: str):
+        """(envelope format, per-slot n_limbs (B,), per-slot max_order (B,))."""
+        i = _CLASS_INDEX[op_class]
+        return self.env.fmt(op_class), self.lane_n[i], self.lane_ord[i]
+
+
+_ACTIVE: ContextVar[Optional[LaneCtx]] = ContextVar("repro_lanes", default=None)
+
+
+def current_lanes() -> Optional[LaneCtx]:
+    """The active lane context, or None outside a mixed decode trace."""
+    return _ACTIVE.get()
+
+
+@contextmanager
+def lane_scope(ctx: LaneCtx):
+    """Install ``ctx`` for the dynamic extent of a mixed decode trace."""
+    token = _ACTIVE.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.reset(token)
+
+
+def lanes_eligible(policy) -> bool:
+    """True when every decode op class resolves to a static (non-AUTO)
+    format — AUTO lanes need per-operand analysis and fall back to the
+    per-policy bucket path."""
+    return all(not is_auto(policy.mode(c)) for c in DECODE_OP_CLASSES)
+
+
+def lane_format(policy, op_class: str) -> MPFormat:
+    return resolve(policy.mode(op_class))
+
+
+def lane_tables(policies: Sequence, width: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side (C, width) int32 lane tables for a resolved-policy batch.
+
+    Rows beyond ``len(policies)`` are padding slots at :data:`PAD_LANE`.
+    """
+    C = len(DECODE_OP_CLASSES)
+    lane_n = np.full((C, width), PAD_LANE[0], np.int32)
+    lane_ord = np.full((C, width), PAD_LANE[1], np.int32)
+    for b, pol in enumerate(policies):
+        for ci, cls in enumerate(DECODE_OP_CLASSES):
+            f = lane_format(pol, cls)
+            lane_n[ci, b] = f.n_limbs
+            lane_ord[ci, b] = f.max_order
+    return lane_n, lane_ord
+
+
+def envelope_of(policies: Sequence) -> LaneEnvelope:
+    """Componentwise per-class envelope of a batch's resolved policies."""
+    limbs, orders = [], []
+    for cls in DECODE_OP_CLASSES:
+        fmts = [lane_format(p, cls) for p in policies]
+        limbs.append(max((f.n_limbs for f in fmts), default=PAD_LANE[0]))
+        orders.append(max((f.max_order for f in fmts), default=PAD_LANE[1]))
+    return LaneEnvelope(tuple(limbs), tuple(orders))

@@ -338,3 +338,136 @@ def mp_paged_attention_pallas(
     )
     return call(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
                 q.astype(jnp.float32), k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# partitioned-lane paged decode kernel (mixed-format micro-batches)
+# ---------------------------------------------------------------------------
+def _mixed_paged_kernel(tbl_ref, len_ref, lane_ref, q_ref, k_ref, v_ref,
+                        o_ref, m_scr, d_scr, acc_scr, *, env_qk, env_pv,
+                        n_rep: int, scale: float, out_dtype):
+    """The paged kernel with per-slot lane depths: grid (B, W) makes each
+    program one lane, so the scalar-prefetched lane table row collapses to
+    four per-program scalars (QK/PV limb count and order cut) that feed the
+    SAME masked cascade the ref realization runs
+    (``kernels/ref.masked_attn_qk_logits`` /
+    ``masked_online_softmax_update``).  The limb loops iterate to the
+    batch-max (envelope) depth; a lane's surplus limb products are masked to
+    exact zeros — the partitioned-lane analogue of the causal-block skip
+    above."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    bs = k_ref.shape[1]
+    H = q_ref.shape[1]
+    hk = H // n_rep
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        d_scr[...] = jnp.zeros_like(d_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    n_qk, ord_qk = lane_ref[b, 0], lane_ref[b, 1]
+    n_pv, ord_pv = lane_ref[b, 2], lane_ref[b, 3]
+
+    @pl.when(j * bs < length)  # skip columns entirely past the slot's length
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale      # (H, Dh)
+        kb = k_ref[0].astype(jnp.float32)             # (bs, Hkv, Dh)
+        vb = v_ref[0].astype(jnp.float32)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (n_rep, bs), 1)
+        valid = pos < length                           # (n_rep, bs)
+        ms, ds, accs = [], [], []
+        for kh in range(hk):  # static GQA loop: 2-D MXU work per kv head
+            sl = slice(kh * n_rep, (kh + 1) * n_rep)
+            logits = ref_backend.masked_attn_qk_logits(
+                q[sl], kb[:, kh], env_qk, n_qk, ord_qk)
+            logits = jnp.where(valid, logits, NEG_INF)
+            m, d, acc = ref_backend.masked_online_softmax_update(
+                m_scr[sl, 0], d_scr[sl, 0], acc_scr[sl], logits,
+                vb[:, kh], env_pv, n_pv, ord_pv, p_mask=valid)
+            ms.append(m)
+            ds.append(d)
+            accs.append(acc)
+        m = jnp.concatenate(ms)
+        d = jnp.concatenate(ds)
+        m_scr[...] = jnp.broadcast_to(m[:, None], m_scr.shape)
+        d_scr[...] = jnp.broadcast_to(d[:, None], d_scr.shape)
+        acc_scr[...] = jnp.concatenate(accs, axis=0)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        d = jnp.maximum(d_scr[:, 0], 1e-30)
+        o_ref[0] = (acc_scr[...] / d[:, None]).astype(out_dtype)
+
+
+def mp_mixed_paged_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_table: jax.Array,
+    lengths: jax.Array,
+    env_qk,
+    env_pv,
+    lane_qk_n: jax.Array,
+    lane_qk_ord: jax.Array,
+    lane_pv_n: jax.Array,
+    lane_pv_ord: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Partitioned-lane paged decode: one launch for a mixed-format batch.
+
+    Same shapes as :func:`mp_paged_attention_pallas` plus the per-slot lane
+    tables (``lane_*`` — (B,) int32, limb count and order cut per slot for
+    the QK and PV contractions) and the static envelope formats ``env_qk``
+    / ``env_pv`` (the componentwise batch max — what the launch is traced
+    at).  Lane data is packed into one (B, 4) scalar-prefetch operand next
+    to the block table.
+    """
+    B, H, Dh = q.shape
+    n_blocks, bs, hk, dh = k_pool.shape
+    assert dh == Dh and H % hk == 0, (q.shape, k_pool.shape)
+    n_rep = H // hk
+    W = block_table.shape[1]
+    env_qk = resolve(env_qk)
+    env_pv = resolve(env_pv)
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dh))
+
+    lanes = jnp.stack(
+        [lane_qk_n, lane_qk_ord, lane_pv_n, lane_pv_ord], axis=1
+    ).astype(jnp.int32)  # (B, 4)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, W),
+        in_specs=[
+            pl.BlockSpec((1, H, Dh), lambda b, j, tbl, ln, la: (b, 0, 0)),
+            pl.BlockSpec((1, bs, hk, Dh),
+                         lambda b, j, tbl, ln, la: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, hk, Dh),
+                         lambda b, j, tbl, ln, la: (tbl[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dh),
+                               lambda b, j, tbl, ln, la: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, Dh), jnp.float32),
+        ],
+    )
+    call = pl.pallas_call(
+        functools.partial(
+            _mixed_paged_kernel, env_qk=env_qk, env_pv=env_pv, n_rep=n_rep,
+            scale=scale, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), out_dtype),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )
+    return call(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+                lanes, q.astype(jnp.float32), k_pool, v_pool)

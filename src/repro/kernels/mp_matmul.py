@@ -41,6 +41,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.formats import FormatLike, MPFormat, resolve
+from repro.kernels import ref as ref_backend
 
 
 def _extract_limbs(x: jax.Array, n_limbs: int) -> list[jax.Array]:
@@ -131,6 +132,51 @@ def _prelimbed_kernel(a_ref, bl_ref, o_ref, acc_ref, *, spec: MPFormat, out_dtyp
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = _combine_orders(acc_ref, spec.max_order + 1).astype(out_dtype)
+
+
+def _mixed_prelimbed_kernel(a_ref, bl_ref, ln_ref, lo_ref, o_ref, acc_ref, *,
+                            env: MPFormat, out_dtype):
+    """Partitioned-lane prelimbed matmul: the ``_prelimbed_kernel`` cascade
+    run at the batch-max (envelope) depth with per-ROW lane masking.
+
+    ``ln_ref``/``lo_ref`` carry each output row's limb count and order cut
+    (lane-broadcast int32 blocks riding the M tiling); a row at ``k`` limbs
+    masks the limb products outside its own format to exact +0.0 via the
+    shared :func:`repro.kernels.ref.lane_keep` predicate — the masked rows
+    skip nothing on the MXU, but the whole mixed micro-batch runs in ONE
+    launch instead of one per format bucket.  The per-order accumulators
+    and the compensated flush are unchanged, so a lane's result matches its
+    homogeneous launch bit-for-bit modulo −0 → +0 flips (leading all-zero
+    orders are exact no-ops in ``_combine_orders``)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    al = _extract_limbs(a, env.n_limbs)
+    lane_n = ln_ref[:, :1]    # (bm, 1): broadcasts over the (bm, bn) tile
+    lane_ord = lo_ref[:, :1]
+
+    for o in range(env.max_order + 1):
+        terms = []
+        for (i, j) in env.products:
+            if i + j != o:
+                continue
+            p = jnp.dot(al[i], bl_ref[j], preferred_element_type=jnp.float32)
+            keep = ref_backend.lane_keep(i, j, lane_n, lane_ord)
+            terms.append(jnp.where(keep, p, 0.0))
+        if not terms:
+            continue
+        tot = terms[0]
+        for t in terms[1:]:
+            tot = tot + t
+        acc_ref[o] += tot
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = _combine_orders(acc_ref, env.max_order + 1).astype(out_dtype)
 
 
 def _both_prelimbed_kernel(al_ref, bl_ref, o_ref, acc_ref, *, spec: MPFormat,
@@ -419,6 +465,40 @@ def build_prelimbed_call(
         kern,
         grid=(M // bm, N // bn, K // bk),
         in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((n_orders, bm, bn), jnp.float32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )
+
+
+def build_mixed_prelimbed_call(
+    M: int, K: int, N: int,
+    env: FormatLike,
+    *,
+    bm: int, bk: int, bn: int,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    """pallas_call for the partitioned-lane prelimbed kernel.
+
+    Inputs (padded shapes): A (M, K) f32; B limbs (L, K, N) bf16 at the
+    envelope depth; lane_n / lane_ord (M, 128) int32 — per-row lane values
+    broadcast across the lane dim so the operand tiles cleanly (the kernel
+    reads column 0).  Output (M, N)."""
+    s = resolve(env)
+    n_orders = s.max_order + 1
+    L = s.n_limbs
+    return pl.pallas_call(
+        functools.partial(_mixed_prelimbed_kernel, env=s, out_dtype=out_dtype),
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((L, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((bm, 128), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((bm, 128), lambda i, j, k: (i, 0)),
+        ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((n_orders, bm, bn), jnp.float32)],

@@ -282,6 +282,74 @@ def mp_matmul_prelimbed_weights(
     return out.reshape(lead + (N,))
 
 
+def mp_mixed_matmul_pallas(
+    x: jax.Array,
+    w: Operand,
+    env: FormatLike,
+    lane_n: jax.Array,
+    lane_ord: jax.Array,
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+    bm: Optional[int] = None,
+    bk: Optional[int] = None,
+    bn: Optional[int] = None,
+) -> jax.Array:
+    """Partitioned-lane matmul: x (..., K) @ W (K, N) with per-row formats.
+
+    ``lane_n``/``lane_ord`` are (M,) int32 over the flattened leading dims
+    of ``x`` (the decode micro-batch: x is (B, 1, K), so M == B).  ``env``
+    is the batch-max envelope format the kernel is traced at.  ``w`` is a
+    :class:`PrelimbedWeight` on the serving path; a raw weight is prelimbed
+    on the fly at the envelope depth (same limb values the homogeneous
+    kernel extracts in-kernel, so numerics are unchanged).  Blocks are
+    selected with the envelope format — mixed and homogeneous launches see
+    identical K tilings whenever the problem fits one K block (every
+    serving decode shape); larger shapes may reassociate across K tiles
+    like any block-size change.
+    """
+    s = resolve(env)
+    if isinstance(w, PrelimbedWeight):
+        assert w.ndim == 2, "prelimbed weights must be 2-D per matmul"
+        w_limbs = w.limbs
+    else:
+        assert w.ndim == 2, "mixed matmul weights must be 2-D"
+        w_limbs = decompose_weights(w.astype(jnp.float32), s.n_limbs,
+                                    interpret=interpret)
+    if w_limbs.shape[0] < s.n_limbs:
+        w_limbs = jnp.concatenate([
+            w_limbs,
+            jnp.zeros((s.n_limbs - w_limbs.shape[0],) + w_limbs.shape[1:],
+                      jnp.bfloat16)], axis=0)
+    w_limbs = w_limbs[: s.n_limbs]
+    lead = x.shape[:-1]
+    a = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    M, K = a.shape
+    _, K2, N = w_limbs.shape
+    assert K == K2
+    lane_n = jnp.broadcast_to(lane_n.reshape(-1), (M,)).astype(jnp.int32)
+    lane_ord = jnp.broadcast_to(lane_ord.reshape(-1), (M,)).astype(jnp.int32)
+    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    bm_, bk_, bn_ = _clamp_vmem(s, bm_, bk_, bn_, out_dtype,
+                                variant="prelimbed_b")
+    Mp, Kp, Np = _round_up(M, bm_), _round_up(K, bk_), _round_up(N, bn_)
+    a = _pad2(a, Mp, Kp)
+    w_limbs = jnp.pad(w_limbs, [(0, 0), (0, Kp - K), (0, Np - N)])
+    # pad rows take the cheapest lane (1 limb, order 0); their outputs are
+    # sliced off.  Lane values broadcast across a 128-wide lane dim so the
+    # int32 operand tiles on TPU-aligned (·, 128) blocks.
+    ln = jnp.concatenate([lane_n, jnp.ones((Mp - M,), jnp.int32)])
+    lo = jnp.concatenate([lane_ord, jnp.zeros((Mp - M,), jnp.int32)])
+    ln = jnp.broadcast_to(ln[:, None], (Mp, 128))
+    lo = jnp.broadcast_to(lo[:, None], (Mp, 128))
+    call = kern.build_mixed_prelimbed_call(
+        Mp, Kp, Np, s, bm=bm_, bk=bk_, bn=bn_, out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    out = call(a, w_limbs, ln, lo)[:M, :N]
+    return out.reshape(lead + (N,))
+
+
 def decompose_weights(
     w: jax.Array, n_limbs: int, *, interpret: bool = False,
     br: int = 256, bc: int = 256,

@@ -86,6 +86,119 @@ def _matmul_limbs(al: jax.Array, bl: jax.Array, s, out_dtype,
     return out.astype(out_dtype)
 
 
+def lane_keep(i: int, j: int, lane_n, lane_ord):
+    """Which lanes keep limb product ``(i, j)`` — THE partitioned-lane
+    predicate every realization (ref oracle, Pallas matmul kernel, Pallas
+    paged-attention kernel) shares.
+
+    ``lane_n`` / ``lane_ord`` are per-lane int32 values (scalars inside the
+    paged kernel's per-slot program, per-row arrays in the batched matmul);
+    a lane at ``k`` limbs and order cut ``c`` keeps exactly the product set
+    of its own format, so its masked cascade IS its homogeneous cascade.
+    """
+    return (i < lane_n) & (j < lane_n) & (i + j <= lane_ord)
+
+
+def masked_matmul_limbs(al: jax.Array, bl: jax.Array, env, lane_n, lane_ord,
+                        out_dtype, dot=None) -> jax.Array:
+    """Per-lane masked limb contraction at the envelope format ``env``.
+
+    The product loop runs the *envelope's* descending-order product
+    sequence; each lane masks products outside its own format to +0.0
+    (``where``, never multiply — 0·Inf would mint NaNs).  Because a lane's
+    products are a subsequence of the envelope's and the masked entries add
+    exact zeros, every lane's result is bit-identical to its homogeneous
+    run modulo zero signs (−0 → +0 flips, which cannot change a token).
+
+    Both accumulation disciplines of :func:`_matmul_limbs` are realized:
+
+    * sequential plain adds (what formats with ≤ 3 limbs run), and
+    * per-order partials + compensated (Neumaier) combine over orders
+      descending (what > 3-limb formats run) — the leading all-zero orders
+      a shallow lane contributes are exact no-ops in the compensation.
+
+    The per-lane result selects its own format's discipline, so the mixed
+    launch reproduces each lane's homogeneous accumulation exactly.  When
+    the envelope itself is ≤ 3 limbs (every serving builtin up to M23) no
+    lane can need the compensated branch and it is skipped statically.
+    ``lane_n``/``lane_ord`` must broadcast against one limb product.
+    """
+    if dot is None:
+        def dot(x, y):
+            return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+    masked = []
+    for (i, j) in env.products:  # descending order: small terms first
+        p = dot(al[i], bl[j])
+        masked.append(((i, j), jnp.where(lane_keep(i, j, lane_n, lane_ord),
+                                         p, 0.0)))
+
+    seq = None
+    for _, p in masked:
+        seq = p if seq is None else seq + p
+
+    if env.n_limbs <= 3:
+        return seq.astype(out_dtype)
+
+    by_order: dict[int, list[jax.Array]] = {}
+    for (i, j), p in masked:
+        by_order.setdefault(i + j, []).append(p)
+    order_sums = []
+    for o in sorted(by_order, reverse=True):  # smallest magnitude first
+        terms = by_order[o]
+        acc = terms[0]
+        for t in terms[1:]:
+            acc = acc + t
+        order_sums.append(acc)
+    neu = limbs_lib.neumaier_sum(order_sums)
+
+    out = jnp.where(lane_n <= 3, seq, neu)
+    return out.astype(out_dtype)
+
+
+def masked_matmul_ref(a: Operand, b: Operand, env, lane_n, lane_ord, *,
+                      out_dtype: jnp.dtype = jnp.float32) -> jax.Array:
+    """Mixed-lane matmul oracle: a (..., M, K) × b (..., K, N) at per-lane
+    depth.  ``lane_n``/``lane_ord`` must broadcast against the (..., M, N)
+    product (the decode micro-batch passes (B, 1, 1) for (B, S, N))."""
+    al = _limbs_of(a, env.n_limbs)
+    bl = _limbs_of(b, env.n_limbs)
+    return masked_matmul_limbs(al, bl, env, lane_n, lane_ord, out_dtype)
+
+
+def masked_attn_qk_logits(q: jax.Array, k: jax.Array, env, lane_n,
+                          lane_ord) -> jax.Array:
+    """Per-lane :func:`attn_qk_logits`: the same untransposed contraction
+    fed through the masked cascade (shared by the ref mixed decode path and
+    the Pallas mixed paged kernel, where ``lane_n`` is the program's
+    scalar-prefetched per-slot value)."""
+    al = limbs_lib.decompose(q, env.n_limbs)
+    bl = limbs_lib.decompose(k, env.n_limbs)
+    return masked_matmul_limbs(al, bl, env, lane_n, lane_ord, jnp.float32,
+                               dot=_dot_nt)
+
+
+def masked_attn_pv(p: jax.Array, v: jax.Array, env, lane_n,
+                   lane_ord) -> jax.Array:
+    al = limbs_lib.decompose(p, env.n_limbs)
+    bl = limbs_lib.decompose(v, env.n_limbs)
+    return masked_matmul_limbs(al, bl, env, lane_n, lane_ord, jnp.float32)
+
+
+def masked_online_softmax_update(m, d, acc, logits, v, env_pv, lane_n,
+                                 lane_ord, *, p_mask=None):
+    """:func:`online_softmax_update` with the P·V contraction at per-lane
+    depth — the softmax bookkeeping itself is format-free and unchanged."""
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    if p_mask is not None:
+        p = jnp.where(p_mask, p, 0.0)
+    alpha = jnp.exp(m - m_new)
+    d_new = d * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] \
+        + masked_attn_pv(p, v, env_pv, lane_n, lane_ord)
+    return m_new, d_new, acc_new
+
+
 def mp_matmul_ref(
     a: Operand,
     b: Operand,

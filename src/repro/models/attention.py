@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch as dispatch_lib
+from repro.core import lanes as lanes_lib
 from repro.core.formats import is_auto
 from repro.core.mpmatmul import mp_attention, mp_dense, mp_matmul, mp_qkv_proj
 from repro.core.policy import PrecisionPolicy
@@ -262,10 +263,19 @@ def gqa_forward(
     mode_qkv = policy.mode("qkv")
     bwd = policy.bwd_kwargs("qkv")
 
-    # one fused projection group: x is read + limb-decomposed once for all
-    # three (GQA widths concat along N in the ops layer — DESIGN.md §4)
-    q, k, v = mp_qkv_proj(x, params["wq"], params["wk"], params["wv"],
-                          mode_qkv, **bwd)
+    lanes = lanes_lib.current_lanes()
+    if lanes is not None:
+        # partitioned-lane mixed decode: per-branch masked matmuls at each
+        # slot's own qkv format under the batch envelope (one launch)
+        env, ln, lo = lanes.for_class("qkv")
+        q, k, v = dispatch_lib.mixed_fused_proj(
+            x, (params["wq"], params["wk"], params["wv"]), env, ln, lo)
+    else:
+        # one fused projection group: x is read + limb-decomposed once for
+        # all three (GQA widths concat along N in the ops layer — DESIGN.md
+        # §4)
+        q, k, v = mp_qkv_proj(x, params["wq"], params["wk"], params["wv"],
+                              mode_qkv, **bwd)
     q = q.reshape(B, S, h, dh)
     k = k.reshape(B, S, hk, dh)
     v = v.reshape(B, S, hk, dh)
@@ -319,8 +329,13 @@ def gqa_forward(
         from repro.dist import sharding as _sh2
         out = _sh2.constrain(out, "attn_out_seq")
     out = out.reshape(B, S, h * dh)
-    out = mp_dense(out, params["wo"], policy.mode("attn_out"),
-                   **policy.bwd_kwargs("attn_out"))
+    if lanes is not None:
+        env, ln, lo = lanes.for_class("attn_out")
+        out = dispatch_lib.dispatch_mixed_matmul(out, params["wo"], env,
+                                                 ln, lo)
+    else:
+        out = mp_dense(out, params["wo"], policy.mode("attn_out"),
+                       **policy.bwd_kwargs("attn_out"))
     return out, new_cache
 
 
@@ -400,6 +415,13 @@ def _paged_decode_attention(q: jax.Array, cache: PagedKVCache,
     scheduler slices each bucket's table to its used-block count
     (serve/scheduler.py) instead of all ``max_blocks`` trash-padded columns
     — and run the policy-obeying masked einsums."""
+    lanes = lanes_lib.current_lanes()
+    if lanes is not None:
+        env_qk, ln_qk, lo_qk = lanes.for_class("attn_qk")
+        env_pv, ln_pv, lo_pv = lanes.for_class("attn_pv")
+        return dispatch_lib.dispatch_mixed_paged_attention(
+            q, cache.k, cache.v, cache.block_table, cache.length,
+            env_qk, env_pv, ln_qk, lo_qk, ln_pv, lo_pv)
     return dispatch_lib.dispatch_paged_attention(
         q, cache.k, cache.v, cache.block_table, cache.length,
         policy.mode("attn_qk"), policy.mode("attn_pv"))

@@ -7,6 +7,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch as dispatch_lib
+from repro.core import lanes as lanes_lib
 from repro.core.mpmatmul import mp_dense, mp_swiglu
 from repro.core.policy import PrecisionPolicy
 
@@ -35,6 +37,14 @@ def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     The gate/up pair runs as ONE fused projection (x read and
     limb-decomposed once, the silu-gate combine applied in the kernel's
     flush — DESIGN.md §4), so the g/u intermediates never round-trip HBM."""
+    lanes = lanes_lib.current_lanes()
+    if lanes is not None:
+        # partitioned-lane mixed decode: every slot runs this MLP at its own
+        # format inside one launch (per-branch masked matmuls, same epilogue)
+        env, ln, lo = lanes.for_class(op_class)
+        h = dispatch_lib.mixed_fused_proj(x, (w_gate, w_up), env, ln, lo,
+                                          epilogue="swiglu")
+        return dispatch_lib.dispatch_mixed_matmul(h, w_down, env, ln, lo)
     mode = policy.mode(op_class)
     bwd = policy.bwd_kwargs(op_class)
     h = mp_swiglu(x, w_gate, w_up, mode, **bwd)
@@ -48,6 +58,10 @@ def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
 
 def unembed(x: jax.Array, w_head: jax.Array, policy: PrecisionPolicy) -> jax.Array:
     """LM head: (..., D) @ (D, V) at the logits mode (precision-sensitive)."""
+    lanes = lanes_lib.current_lanes()
+    if lanes is not None:
+        env, ln, lo = lanes.for_class("lm_head")
+        return dispatch_lib.dispatch_mixed_matmul(x, w_head, env, ln, lo)
     return mp_dense(x, w_head, policy.mode("lm_head"),
                     **policy.bwd_kwargs("lm_head"))
 

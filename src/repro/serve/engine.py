@@ -39,6 +39,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import context as context_lib
 from repro.core.formats import is_auto
+from repro.core.lanes import LaneCtx, LaneEnvelope, lane_scope
 from repro.core.limbs import PrelimbedWeight
 from repro.core.policy import PrecisionPolicy
 from repro.models import transformer as T
@@ -180,6 +181,46 @@ def make_paged_decode_step(cfg: ModelConfig, policy: PrecisionPolicy,
     return step
 
 
+def make_mixed_decode_step(cfg: ModelConfig, envelope: LaneEnvelope,
+                           mesh=None):
+    """One partitioned-lane decode step: a heterogeneous micro-batch whose
+    slots run at different (non-AUTO) formats inside ONE launch.
+
+    ``envelope`` is the static per-op-class (n_limbs, max_order) ceiling —
+    it keys the trace, so any batch that fits under it shares the compiled
+    step regardless of which formats sit in which lane.  ``lane_n`` /
+    ``lane_ord`` are (C, B) int32 *traced* inputs (C =
+    ``lanes.DECODE_OP_CLASSES``): changing a slot's format between ticks is
+    a new input value, not a new trace.  The lane context rides a
+    contextvar installed around the traced body (the ``pin_backend``
+    pattern), so the model code needs no signature changes — projection and
+    attention call sites pick it up via ``lanes.current_lanes()``.
+
+    The policy passed to the model is only a carrier for the non-lane ops
+    (all format-independent at S == 1); every format-sensitive contraction
+    reads the lane tables instead.  Same (logits, guard_stat, pools) return
+    contract as :func:`make_paged_decode_step`.
+    """
+    L = cfg.n_layers
+    carrier = PrecisionPolicy.serve_default()
+
+    def step(params, pool_k, pool_v, table, lengths, tokens, lane_n,
+             lane_ord):
+        cache = T.ModelCache(attn=PagedKVCache(
+            k=pool_k, v=pool_v,
+            block_table=jnp.broadcast_to(table, (L,) + table.shape),
+            length=jnp.broadcast_to(lengths, (L,) + lengths.shape)))
+        ctx = LaneCtx(envelope, lane_n.astype(jnp.int32),
+                      lane_ord.astype(jnp.int32))
+        with lane_scope(ctx):
+            logits, _, new_cache = T.forward(params, {"tokens": tokens}, cfg,
+                                             carrier, cache=cache, mesh=mesh)
+        stat = jnp.max(jnp.abs(logits[:, -1, :]), axis=-1)
+        return logits, stat, new_cache.attn.k, new_cache.attn.v
+
+    return step
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  max_seq: int = 512,
@@ -200,6 +241,20 @@ class ServeEngine:
         self.prelimb_weights = prelimb_weights
         self._step_cache: Dict[PrecisionPolicy, Tuple] = {}
         self._paged_step_cache: Dict[PrecisionPolicy, Tuple] = {}
+        # LaneEnvelope -> (mixed_decode_step,): the partitioned-lane decode
+        # trace cache.  Keyed by the static envelope, NOT the format mix —
+        # a mode joining mid-stream re-uses the batch-max trace as long as
+        # it fits under the envelope (no re-trace, no eviction of live
+        # per-policy entries; asserted by the serve soak)
+        self._mixed_step_cache: Dict[LaneEnvelope, Tuple] = {}
+        # observability: traces actually executed vs. step/prelimb cache
+        # reuse — the scheduler folds these into its stats() so tests and
+        # the soak gate can assert "no stray trace on a mid-stream join"
+        self.trace_events = 0
+        self.step_cache_hits = 0
+        self.step_cache_misses = 0
+        self.prelimb_cache_hits = 0
+        self.prelimb_cache_misses = 0
         # (n_limbs, id(params)) -> prelimbed tree: the id guards against a
         # live params swap (eng.params = reloaded) silently leaving decode on
         # stale limb stacks while prefill uses the new weights
@@ -225,23 +280,35 @@ class ServeEngine:
     # compiled executables without bound
     MAX_POLICY_CACHE = 8
 
-    def _cached_steps(self, cache: Dict, policy: PrecisionPolicy,
-                      factories: Tuple) -> Tuple:
-        """Shared LRU discipline for every per-policy jit'd step cache:
-        touch on hit, evict oldest past MAX_POLICY_CACHE, trace (with the
-        engine's backend pinned) on miss."""
-        if policy in cache:
-            cache[policy] = cache.pop(policy)  # LRU touch
+    def _counted_trace(self, fn):
+        """Bump ``trace_events`` each time jax (re)traces ``fn`` — the body
+        runs once per trace, so the counter is a trace spy, not a call
+        counter (compiled executions never re-enter the Python body)."""
+        def wrapped(*args, **kwargs):
+            self.trace_events += 1
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+    def _cached_steps(self, cache: Dict, key, factories: Tuple) -> Tuple:
+        """Shared LRU discipline for every jit'd step cache (keyed by policy
+        or lane envelope): touch on hit, evict oldest past MAX_POLICY_CACHE,
+        trace (with the engine's backend pinned) on miss."""
+        if key in cache:
+            cache[key] = cache.pop(key)  # LRU touch
+            self.step_cache_hits += 1
         else:
             from repro.core.dispatch import pin_backend
 
+            self.step_cache_misses += 1
             while len(cache) >= self.MAX_POLICY_CACHE:
                 cache.pop(next(iter(cache)))
-            cache[policy] = tuple(
-                jax.jit(pin_backend(make(self.cfg, policy, self.mesh),
-                                    self.matmul_backend))
+            cache[key] = tuple(
+                jax.jit(self._counted_trace(
+                    pin_backend(make(self.cfg, key, self.mesh),
+                                self.matmul_backend)))
                 for make in factories)
-        return cache[policy]
+        return cache[key]
 
     def _steps_for(self, policy: PrecisionPolicy) -> Tuple:
         """jit'd (prefill, decode) pair for one policy (LRU-cached: swapping
@@ -265,6 +332,22 @@ class ServeEngine:
             self._paged_step_cache, policy,
             (make_paged_prefill_step, make_paged_decode_step))
 
+    def mixed_decode_step_for(self, envelope: LaneEnvelope):
+        """jit'd partitioned-lane decode step for one static lane envelope.
+
+        The envelope — not the format mix — keys the trace, so every batch
+        that fits under it (any per-slot assignment of formats at or below
+        the per-class ceilings) shares one compiled executable.  A mode
+        joining mid-stream therefore reuses the batch-max trace instead of
+        minting (and possibly evicting) per-policy entries.  Same dense-GQA
+        restriction as :meth:`paged_steps_for`."""
+        if self.cfg.family not in ("dense",) or self.cfg.mla is not None:
+            raise NotImplementedError(
+                f"paged serving supports dense GQA models only "
+                f"(family={self.cfg.family!r}, mla={self.cfg.mla is not None})")
+        return self._cached_steps(self._mixed_step_cache, envelope,
+                                  (make_mixed_decode_step,))[0]
+
     def set_policy(self, policy: Union[PrecisionPolicy, str, bytes, dict]
                    ) -> PrecisionPolicy:
         """Hot-swap the precision policy for all subsequent steps (the
@@ -287,13 +370,25 @@ class ServeEngine:
         stacks, decomposed ONCE per (policy limb count, params) and cached.
         Falls back to the raw params under AUTO policies or when pre-limbing
         is disabled."""
-        if not self.prelimb_weights:
-            return self.params
-        n = _policy_prelimb_limbs(policy)
-        if n is None:
+        return self._decode_params_for_limbs(_policy_prelimb_limbs(policy))
+
+    def _decode_params_for_limbs(self, n: Optional[int]):
+        """Pre-limbed decode params at an explicit limb depth — the entry
+        the mixed path uses with the *batch-max envelope* depth, so a
+        heterogeneous batch shares the homogeneous cache entry of its
+        deepest member (``decompose`` is depth-stable: the first k limbs of
+        a deeper stack are bit-identical to the k-limb stack, which is what
+        lets shallower lanes mask into the shared stack).  The key is
+        (n_limbs, id(params)): a mode joining mid-stream under the same
+        envelope is a pure cache hit — counted, so the soak can assert no
+        live entry was evicted or re-decomposed."""
+        if not self.prelimb_weights or n is None:
             return self.params
         key = (n, id(self.params))
-        if key not in self._prelimb_cache:
+        if key in self._prelimb_cache:
+            self.prelimb_cache_hits += 1
+        else:
+            self.prelimb_cache_misses += 1
             stale = [k for k in self._prelimb_cache if k[1] != id(self.params)]
             for k in stale:
                 del self._prelimb_cache[k]
@@ -301,6 +396,19 @@ class ServeEngine:
             self._prelimb_cache[key] = prelimb_dense_params(
                 self.params, n, interpret=interpret)
         return self._prelimb_cache[key]
+
+    def cache_stats(self) -> Dict[str, int]:
+        """Trace/cache observability counters (merged into scheduler
+        ``stats()``): ``trace_events`` counts jit traces actually executed;
+        the hit/miss pairs cover the jit'd-step LRU and the prelimbed-weight
+        cache."""
+        return {
+            "trace_events": self.trace_events,
+            "step_cache_hits": self.step_cache_hits,
+            "step_cache_misses": self.step_cache_misses,
+            "prelimb_cache_hits": self.prelimb_cache_hits,
+            "prelimb_cache_misses": self.prelimb_cache_misses,
+        }
 
     # -- single-request path (prefill writes the whole pool cache; simple and
     #    jit-stable: one prefill per unique prompt length bucket) -----------

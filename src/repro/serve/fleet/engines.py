@@ -17,7 +17,11 @@ loops over it —
     see (the interference the fleet benchmark measures);
   * :class:`DecodeEngine` — a slot map over the cell pool; accepts handoffs
     into free slots (zero-copy from its own prefill engine, block-copy from
-    another cell's) and runs one policy-bucketed decode tick via
+    another cell's) and runs one shape-bucketed decode tick
+    (:func:`repro.serve.primitives.decode_tick_plan`): static-format slots
+    share ONE launch regardless of mode mix — heterogeneous sets take the
+    partitioned-lane :func:`repro.serve.primitives.decode_mixed_step`,
+    homogeneous sets the legacy
     :func:`repro.serve.primitives.decode_bucket_step`.
 
 Pool discipline: the device arrays are single-writer — the router steps each
@@ -115,6 +119,7 @@ class DecodeEngine:
         self._slots: List[Optional[ScheduledRequest]] = [None] * self.max_slots
         self.steps = 0
         self.decode_token_slots = 0
+        self.decode_launches = 0
         self.guard = guard or GuardrailConfig()
         self.injector: Optional[FaultInjector] = None  # chaos seam
         self.guard_trips = 0
@@ -152,21 +157,28 @@ class DecodeEngine:
         return True
 
     def step(self) -> Tuple[List[ScheduledRequest], List[ScheduledRequest]]:
-        """One decode tick: bucket active slots by resolved policy, run one
-        jit'd step per bucket, evict finished requests (blocks freed, slot
-        cleared).  Returns ``(completed, tripped)``: requests that finished
-        this tick, and requests the numerical guardrail evicted (poisoned
-        logits — their bad token is discarded, their blocks are freed, and
-        the router re-admits them escalated one mode up)."""
+        """One decode tick over the tick's decode plan, evicting finished
+        requests (blocks freed, slot cleared).  The plan is shape-bucketed:
+        every static-format request rides ONE launch per tick regardless of
+        the cell's mode mix (heterogeneous sets take the partitioned-lane
+        mixed step; only AUTO policies still bucket per policy).  Returns
+        ``(completed, tripped)``: requests that finished this tick, and
+        requests the numerical guardrail evicted (poisoned logits — their
+        bad token is discarded, their blocks are freed, and the router
+        re-admits them escalated one mode up)."""
         active = [r for r in self._slots if r is not None]
         completed: List[ScheduledRequest] = []
         tripped: List[ScheduledRequest] = []
-        buckets = prim.bucket_by_policy(active, self.engine.policy)
-        for _, reqs in buckets:
-            toks, ok = prim.decode_bucket_step(
+        plan = prim.decode_tick_plan(active, self.engine.policy)
+        cap = prim.pow2_at_most(self.max_slots)
+        for kind, reqs in plan:
+            step_fn = (prim.decode_mixed_step if kind == "mixed"
+                       else prim.decode_bucket_step)
+            toks, ok = step_fn(
                 self.engine, self.pool, reqs, max_slots=self.max_slots,
                 guard=self.guard, injector=self.injector,
                 cell_id=self.cell_id)
+            self.decode_launches += -(-len(reqs) // cap)
             self.decode_token_slots += len(reqs)
             for req, tok, good in zip(list(reqs), toks, ok):
                 if not good:
@@ -188,7 +200,7 @@ class DecodeEngine:
                     req.slot = None
                     req.state = "done"
                     completed.append(req)
-        if buckets:
+        if plan:
             self.steps += 1
         return completed, tripped
 

@@ -47,13 +47,50 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import context as context_lib
-from repro.core.formats import is_auto
+from repro.core.formats import (
+    available_formats, builtin_formats, get_format, is_auto)
 from repro.core.policy import PrecisionPolicy
 from repro.serve.kv_cache import PagedKVPool
 
 # the guardrail's recovery dial: one mode UP on numerical divergence — the
-# exact inverse of the router's pressure DOWNGRADE_CHAIN (M23 -> M16 -> M8)
+# exact inverse of the router's pressure DOWNGRADE_CHAIN (M23 -> M16 -> M8).
+# This is only the *fast path* for the built-in serving ladder:
+# :func:`_next_rung` falls back to the format registry for run-time
+# registered formats (next-higher mantissa_bits), so a custom-format request
+# that trips the guardrail escalates instead of silently re-admitting at the
+# mode that just diverged.
 ESCALATE_CHAIN = {"M8": "M16", "M16": "M23"}
+
+
+def _next_rung(cur: str) -> Optional[str]:
+    """The next precision rung above ``cur``: the hardcoded builtin chain
+    when it applies, else the registered format with the smallest
+    ``mantissa_bits`` strictly above the current one (ties broken by fewer
+    limbs, then name, for determinism).  None when ``cur`` is unknown,
+    AUTO, or already at the top of the ladder."""
+    nxt = ESCALATE_CHAIN.get(cur)
+    if nxt is not None:
+        return nxt
+    if cur in builtin_formats():
+        # builtin formats above the chain (M23/M36/M52) are the serving
+        # ceiling by design — only *registered* custom formats fall through
+        # to the registry ladder
+        return None
+    try:
+        fmt = get_format(cur)
+    except Exception:
+        return None
+    if is_auto(fmt):
+        return None
+    cands = []
+    for name in available_formats():
+        f = get_format(name)
+        if not is_auto(f) and f.mantissa_bits > fmt.mantissa_bits:
+            cands.append(f)
+    if not cands:
+        return None
+    best = min(cands, key=lambda f: (f.mantissa_bits, f.n_limbs, f.name))
+    return best.name
 
 
 @dataclasses.dataclass
@@ -122,6 +159,21 @@ def pow2_at_least(n: int) -> int:
     return p
 
 
+def pow2_at_most(n: int) -> int:
+    """Largest power of two <= n (n >= 1) — the decode micro-batch width
+    cap.  Clamping to this instead of a raw non-pow2 ``max_slots`` keeps
+    every decode launch on a pow2-bucketed batch shape: ``min(pow2_at_least
+    (len), max_slots)`` with e.g. max_slots=12 would mint a stray width-12
+    jit trace the moment 9+ requests were active, alongside the 1/2/4/8
+    buckets."""
+    if n < 1:
+        raise ValueError(f"micro-batch cap must be >= 1, got {n}")
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
 # ---------------------------------------------------------------------------
 # numerical guardrail
 # ---------------------------------------------------------------------------
@@ -165,13 +217,16 @@ def guard_check(stat: np.ndarray, policy: PrecisionPolicy,
 
 def escalate_mode(req: ScheduledRequest) -> bool:
     """One step UP the precision ladder after a guardrail trip (M8 -> M16 ->
-    M23), recording the original mode; returns False when the request has no
-    escalatable mode (full-policy or engine-default requests re-admit
-    unchanged — recovery still applies, the dial just has nowhere to go)."""
+    M23 on the builtin chain; registered custom formats climb to the
+    registry's next-higher ``mantissa_bits`` rung via :func:`_next_rung`),
+    recording the original mode; returns False when the request has no
+    escalatable mode (full-policy or engine-default requests, unknown or
+    top-of-ladder formats, re-admit unchanged — recovery still applies, the
+    dial just has nowhere to go)."""
     if req.policy is not None or req.mode is None:
         return False
     cur = getattr(req.mode, "name", None) or str(req.mode)
-    nxt = ESCALATE_CHAIN.get(cur)
+    nxt = _next_rung(cur)
     if nxt is None:
         return False
     if req.escalated_from is None:
@@ -314,6 +369,37 @@ def bucket_by_policy(reqs: Sequence[ScheduledRequest],
     return list(buckets.items())
 
 
+def decode_tick_plan(reqs: Sequence[ScheduledRequest],
+                     base: PrecisionPolicy
+                     ) -> List[Tuple[str, List[ScheduledRequest]]]:
+    """Partition one tick's active requests into decode launches — shape
+    bucketing, not format bucketing.
+
+    Every lane-eligible request (all decode op classes resolved to static
+    formats) joins ONE group regardless of its format: a homogeneous group
+    keeps the legacy per-policy step (``("bucket", reqs)`` — no lane tables
+    to carry), a heterogeneous group becomes one partitioned-lane launch
+    (``("mixed", reqs)`` via :func:`decode_mixed_step`).  Only AUTO-policy
+    requests still bucket per policy (their formats are chosen per operand
+    *inside* the step, so there is no static lane to mask).  Under any
+    non-AUTO traffic mix the plan is exactly one launch per tick.
+    """
+    from repro.core import lanes as lanes_lib
+
+    eligible: List[ScheduledRequest] = []
+    rest: List[ScheduledRequest] = []
+    for r in reqs:
+        pol = resolve_request(r, base)
+        (eligible if lanes_lib.lanes_eligible(pol) else rest).append(r)
+    plan: List[Tuple[str, List[ScheduledRequest]]] = []
+    if eligible:
+        pols = {resolve_request(r, base) for r in eligible}
+        plan.append(("bucket" if len(pols) == 1 else "mixed", eligible))
+    for _, group in bucket_by_policy(rest, base):
+        plan.append(("bucket", group))
+    return plan
+
+
 def decode_bucket_step(engine, pool: PagedKVPool,
                        reqs: Sequence[ScheduledRequest], *,
                        max_slots: int, guard=None, injector=None,
@@ -335,15 +421,16 @@ def decode_bucket_step(engine, pool: PagedKVPool,
     previous token lands in ``req.itl`` — the per-token latency distribution
     whose p95 the fleet benchmark compares across scheduling disciplines
     (prefill interference shows up here as a heavy tail)."""
-    mb = min(pow2_at_least(len(reqs)), max_slots)
-    w = table_width(pool, reqs)
-    table = np.stack(
-        [pool.table_row(r.blocks) for r in reqs]
-        + [pool.trash_row()] * (mb - len(reqs)))[:, :w]
-    lengths = np.asarray([r.length for r in reqs]
-                         + [0] * (mb - len(reqs)), np.int32)
-    tokens = np.asarray([[r.next_token] for r in reqs]
-                        + [[0]] * (mb - len(reqs)), np.int32)
+    cap = pow2_at_most(max_slots)
+    if len(reqs) > cap:
+        # pathological non-pow2 max_slots admitting more actives than the
+        # pow2 cap: run pow2-width chunks rather than mint a stray trace
+        return _chunked_steps(
+            lambda part: decode_bucket_step(
+                engine, pool, part, max_slots=cap, guard=guard,
+                injector=injector, cell_id=cell_id), reqs, cap)
+    mb = min(pow2_at_least(len(reqs)), cap)
+    table, lengths, tokens, w = _micro_batch(pool, reqs, mb)
     policy = resolve_request(reqs[0], engine.policy)
     _, decode_fn = engine.paged_steps_for(policy)
     params = engine._decode_params_for(policy)
@@ -353,6 +440,32 @@ def decode_bucket_step(engine, pool: PagedKVPool,
     pool.update(new_k, new_v)
     toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
     ok = guard_check(np.asarray(stat)[: len(reqs)], policy, guard)
+    _finish_decode_rows(reqs, ok, injector, cell_id)
+    return toks[: len(reqs)], ok
+
+
+def _micro_batch(pool: PagedKVPool, reqs: Sequence[ScheduledRequest],
+                 mb: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """The pow2-padded (table, lengths, tokens) arrays one decode launch
+    consumes; padded rows are (trash row, length 0, token 0) so they read
+    nothing and write to trash."""
+    w = table_width(pool, reqs)
+    table = np.stack(
+        [pool.table_row(r.blocks) for r in reqs]
+        + [pool.trash_row()] * (mb - len(reqs)))[:, :w]
+    lengths = np.asarray([r.length for r in reqs]
+                         + [0] * (mb - len(reqs)), np.int32)
+    tokens = np.asarray([[r.next_token] for r in reqs]
+                        + [[0]] * (mb - len(reqs)), np.int32)
+    return table, lengths, tokens, w
+
+
+def _finish_decode_rows(reqs: Sequence[ScheduledRequest], ok: np.ndarray,
+                        injector, cell_id: int) -> None:
+    """Post-step request bookkeeping shared by the bucket and mixed decode
+    steps: injected-fault verdicts, cache-length advance, and per-token ITL
+    accounting (rows that tripped advance nothing — the victim re-prefills
+    from its host-visible prefix)."""
     if injector is not None:
         for i, r in enumerate(reqs):
             if ok[i] and injector.step_nan(cell_id, r.slot, r.rid):
@@ -364,6 +477,64 @@ def decode_bucket_step(engine, pool: PagedKVPool,
         r.length += 1
         prev = r.t_first if not r.itl else r.t_first + sum(r.itl)
         r.itl.append(now - prev)
+
+
+def _chunked_steps(step_fn, reqs: Sequence[ScheduledRequest], cap: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    parts = [step_fn(list(reqs[i:i + cap]))
+             for i in range(0, len(reqs), cap)]
+    return (np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]))
+
+
+def decode_mixed_step(engine, pool: PagedKVPool,
+                      reqs: Sequence[ScheduledRequest], *,
+                      max_slots: int, guard=None, injector=None,
+                      cell_id: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """ONE partitioned-lane decode launch over a *heterogeneous* group:
+    every request runs at its own resolved (non-AUTO) format inside a
+    single jit'd step — the run-time reconfigurable datapath of the paper,
+    lane-partitioned over the micro-batch instead of bucketed into one
+    launch per format.
+
+    The group's static lane *envelope* (per-op-class max limbs/order) keys
+    the trace; the per-slot formats travel as (C, B) int32 lane tables —
+    data, not trace constants — so any format mix under the envelope reuses
+    one compiled step.  Weights come from the prelimbed cache at the
+    envelope's batch-max limb depth: limb decomposition is depth-stable, so
+    a shallow lane masking into the deep stack sees bit-identical limbs to
+    its homogeneous bucket.  Guardrail verdicts are per-request (each
+    request's own lm_head ``rel_err_bound`` scales its sentinel), matching
+    what the per-bucket path would have ruled.
+
+    Same return contract, padding discipline, and ITL accounting as
+    :func:`decode_bucket_step`."""
+    from repro.core import lanes as lanes_lib
+
+    cap = pow2_at_most(max_slots)
+    if len(reqs) > cap:
+        return _chunked_steps(
+            lambda part: decode_mixed_step(
+                engine, pool, part, max_slots=cap, guard=guard,
+                injector=injector, cell_id=cell_id), reqs, cap)
+    mb = min(pow2_at_least(len(reqs)), cap)
+    table, lengths, tokens, w = _micro_batch(pool, reqs, mb)
+    policies = [resolve_request(r, engine.policy) for r in reqs]
+    env = lanes_lib.envelope_of(policies)
+    lane_n, lane_ord = lanes_lib.lane_tables(policies, mb)
+    decode_fn = engine.mixed_decode_step_for(env)
+    params = engine._decode_params_for_limbs(env.max_limbs)
+    logits, stat, new_k, new_v = decode_fn(
+        params, pool.k, pool.v, jnp.asarray(table),
+        jnp.asarray(lengths), jnp.asarray(tokens),
+        jnp.asarray(lane_n), jnp.asarray(lane_ord))
+    pool.update(new_k, new_v)
+    toks = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+    stat_np = np.asarray(stat)[: len(reqs)]
+    ok = np.ones(len(reqs), bool)
+    for i, (r, pol) in enumerate(zip(reqs, policies)):
+        ok[i] = bool(guard_check(stat_np[i:i + 1], pol, guard)[0])
+    _finish_decode_rows(reqs, ok, injector, cell_id)
     return toks[: len(reqs)], ok
 
 

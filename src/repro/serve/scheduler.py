@@ -108,6 +108,8 @@ class ContinuousScheduler:
         self.submitted = 0
         self.guard_trip_events = 0
         self.escalation_events = 0
+        self.decode_launches = 0    # jit'd decode launches issued
+        self.decode_ticks = 0       # ticks that ran >= 1 decode launch
 
     def install_faults(self, plan_or_injector) -> FaultInjector:
         """Install a fault plan (single-engine chaos: ``step_nan`` and
@@ -259,28 +261,39 @@ class ContinuousScheduler:
 
     def step(self) -> bool:
         """One scheduler tick: expire deadlines, admit arrivals, then run
-        one decode step for every active policy bucket (guardrail verdicts
-        folded into each step — a tripped slot is evicted alone and
-        escalated).  Returns True if any work was done."""
+        the tick's decode plan (guardrail verdicts folded into each step —
+        a tripped slot is evicted alone and escalated).
+
+        The plan is *shape*-bucketed, not format-bucketed: every request
+        with static (non-AUTO) formats rides ONE launch per tick — a
+        homogeneous set on the legacy per-policy step, a heterogeneous set
+        on the partitioned-lane mixed step (per-slot lane tables inside one
+        jit'd launch).  Only AUTO-policy requests still bucket per policy.
+        Returns True if any work was done."""
         if self.injector is not None:
             self.injector.begin_tick(self.steps)
         self._sweep_deadlines()
         admitted = self._admit()
         active = [r for r in self._slots if r is not None]
-        buckets = prim.bucket_by_policy(active, self.engine.policy)
-        for _, reqs in buckets:
-            toks, ok = prim.decode_bucket_step(
+        plan = prim.decode_tick_plan(active, self.engine.policy)
+        cap = prim.pow2_at_most(self.max_slots)
+        for kind, reqs in plan:
+            step_fn = (prim.decode_mixed_step if kind == "mixed"
+                       else prim.decode_bucket_step)
+            toks, ok = step_fn(
                 self.engine, self.pool, reqs, max_slots=self.max_slots,
                 guard=self.guard, injector=self.injector, cell_id=0)
+            self.decode_launches += -(-len(reqs) // cap)
             self.decode_token_slots += len(reqs)
             for req, tok, good in zip(list(reqs), toks, ok):
                 if good:
                     self._push_token(req, int(tok))
                 else:
                     self._trip(req)
-        if buckets:
+        if plan:
+            self.decode_ticks += 1
             self.steps += 1
-        return bool(admitted or buckets)
+        return bool(admitted or plan)
 
     # ---- drivers -----------------------------------------------------------
     @property
@@ -334,7 +347,12 @@ class ContinuousScheduler:
                "escalations": self.escalation_events,
                "slot_occupancy": round(occ, 4),
                "blocks_free": self.pool.n_free,
-               "blocks_live": self.pool.n_live}
+               "blocks_live": self.pool.n_live,
+               "decode_launches": self.decode_launches,
+               "launches_per_tick": round(
+                   self.decode_launches / self.decode_ticks, 4)
+               if self.decode_ticks else 0.0}
+        out.update(self.engine.cache_stats())
         if self.injector is not None:
             out.update(self.injector.stats())
         out.update(prim.latency_stats(self.completed))

@@ -1,0 +1,312 @@
+"""Partitioned-lane mixed-format decode: one launch per tick for
+heterogeneous batches, bit-identical to the per-bucket path and solo static
+runs; lane-masking properties at the kernel seam; the precision-ladder
+registry fallback; and trace-hygiene regressions (pow2 micro-batch cap,
+no re-trace on mid-stream mode join)."""
+import itertools
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.core import dispatch as dispatch_lib
+from repro.core import formats as formats_lib
+from repro.core import lanes as lanes_lib
+from repro.core.policy import PrecisionPolicy
+from repro.models import transformer as T
+from repro.serve import primitives as prim
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import ContinuousScheduler, ScheduledRequest
+
+CFG = get_config("paper-mpfp-100m", smoke=True)
+BUILTINS = ("M8", "M16", "M23", "M36", "M52")
+
+
+def _custom_fmt():
+    # register_format is idempotent for identical specs, so every test may
+    # call this regardless of suite ordering
+    return formats_lib.register_format(
+        "M12QOS", mantissa_bits=12, n_limbs=2, max_order=1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(params, backend=None, policy=None, max_batch=8):
+    return ServeEngine(CFG, params, max_batch=max_batch, max_seq=64,
+                       policy=policy or PrecisionPolicy.serve_default(),
+                       matmul_backend=backend)
+
+
+def _prompts(seed, sizes):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, size=s).astype(np.int32)
+            for s in sizes]
+
+
+def _run(eng, prompts, modes, *, max_new=3, arrivals=None):
+    sched = ContinuousScheduler(eng, n_blocks=48, block_size=8)
+    arrivals = arrivals or [0] * len(prompts)
+    news = max_new if isinstance(max_new, list) else [max_new] * len(prompts)
+    done = sched.run([
+        ScheduledRequest(rid=i, prompt=p, max_new=n, mode=m, arrival=a)
+        for i, (p, m, a, n) in enumerate(
+            zip(prompts, modes, arrivals, news))])
+    return {r.rid: r.out for r in done}, sched
+
+
+# =========================================================================
+# single-launch parity: mixed batch vs solo runs and the per-bucket path
+# =========================================================================
+class TestMixedSingleLaunch:
+    def test_every_builtin_mode_plus_custom_one_launch_ref(self, params):
+        """All five builtin modes plus a registered custom format decoding
+        concurrently: ONE decode launch per tick, every request's tokens
+        bit-identical to its homogeneous solo run."""
+        modes = list(BUILTINS) + [_custom_fmt().name]
+        prompts = _prompts(20, [5, 4, 6, 3, 5, 4])
+        solo = []
+        for p, m in zip(prompts, modes):
+            e = _engine(params, backend="ref",
+                        policy=PrecisionPolicy.serve_default().overlay(m))
+            solo.append(e.generate([p], max_new=3)[0])
+        got, sched = _run(_engine(params, backend="ref"), prompts, modes)
+        for i, m in enumerate(modes):
+            assert got[i] == solo[i], m
+        s = sched.stats()
+        assert s["launches_per_tick"] == 1.0
+        assert s["decode_launches"] == sched.decode_ticks
+
+    def test_mixed_batch_matches_solo_pallas_interpret(self, params):
+        """Heterogeneous limb depths (1/2/3 + custom 2-limb) through the
+        partitioned-lane pallas kernel path."""
+        modes = ["M8", "M16", "M23", _custom_fmt().name]
+        prompts = _prompts(21, [5, 4, 6, 3])
+        solo = []
+        for p, m in zip(prompts, modes):
+            e = _engine(params, backend="pallas_interpret",
+                        policy=PrecisionPolicy.serve_default().overlay(m))
+            solo.append(e.generate([p], max_new=3)[0])
+        got, sched = _run(_engine(params, backend="pallas_interpret"),
+                          prompts, modes)
+        for i, m in enumerate(modes):
+            assert got[i] == solo[i], m
+        assert sched.stats()["launches_per_tick"] == 1.0
+
+    def test_mixed_step_bit_identical_to_per_bucket_path(self, params,
+                                                         monkeypatch):
+        """The single partitioned-lane launch must emit exactly the tokens
+        the legacy one-launch-per-format plan emitted — shape bucketing is
+        a launch-count optimization, not a numerics change."""
+        modes = ["M8", "M23", "M16", "M8"]
+        prompts = _prompts(22, [5, 3, 6, 4])
+        eng = _engine(params, backend="ref")
+        mixed, sched_mixed = _run(eng, prompts, modes, max_new=4)
+        assert sched_mixed.stats()["launches_per_tick"] == 1.0
+
+        def legacy_plan(reqs, base):
+            return [("bucket", group)
+                    for _, group in prim.bucket_by_policy(reqs, base)]
+
+        monkeypatch.setattr(prim, "decode_tick_plan", legacy_plan)
+        bucketed, sched_bucket = _run(eng, prompts, modes, max_new=4)
+        assert sched_bucket.stats()["launches_per_tick"] > 1.0
+        assert mixed == bucketed
+
+    def test_submission_order_invariance(self, params):
+        """Lane assignment is a routing detail: permuting the submission
+        order of a fixed mixed workload must not change any request's
+        tokens (the lane-masking math sees the same format wherever the
+        request lands in the micro-batch)."""
+        modes = ["M8", "M16", _custom_fmt().name]
+        prompts = _prompts(23, [5, 4, 3])
+        eng = _engine(params, backend="ref")  # shared: traces cached once
+        baseline = None
+        for perm in itertools.permutations(range(3)):
+            sched = ContinuousScheduler(eng, n_blocks=48, block_size=8)
+            done = sched.run([
+                ScheduledRequest(rid=i, prompt=prompts[i], max_new=3,
+                                 mode=modes[i])
+                for i in perm])
+            got = {r.rid: r.out for r in done}
+            if baseline is None:
+                baseline = got
+            assert got == baseline, perm
+            assert sched.stats()["launches_per_tick"] == 1.0
+
+    def test_auto_requests_still_bucket_apart(self, params):
+        """AUTO picks formats per operand inside the step — it has no static
+        lane, so it must ride its own launch while every static-format
+        request still shares one."""
+        eng = _engine(params, backend="ref")
+        prompts = _prompts(24, [4, 5, 3])
+        sched = ContinuousScheduler(eng, n_blocks=48, block_size=8)
+        reqs = [ScheduledRequest(rid=0, prompt=prompts[0], max_new=3,
+                                 mode="M8"),
+                ScheduledRequest(rid=1, prompt=prompts[1], max_new=3,
+                                 mode="M16"),
+                ScheduledRequest(rid=2, prompt=prompts[2], max_new=3,
+                                 policy=PrecisionPolicy.auto())]
+        solo = _engine(params, policy=PrecisionPolicy.auto()).generate(
+            [prompts[2]], max_new=3)[0]
+        done = sched.run(reqs)
+        got = {r.rid: r.out for r in done}
+        assert got[2] == solo
+        # two launches per tick: one mixed static lane group + one AUTO
+        assert sched.stats()["launches_per_tick"] == 2.0
+
+
+# =========================================================================
+# lane masking at the kernel seam
+# =========================================================================
+class TestLaneMasking:
+    """A lane running at k limbs inside a wide (envelope-depth) launch must
+    be bit-identical to the same operand in a homogeneous k-limb call."""
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+    def test_lane_rows_match_homogeneous(self, backend):
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        fmts = [formats_lib.get_format(m) for m in ("M8", "M16", "M23", "M36")]
+        env = lanes_lib.envelope_format(
+            max(f.n_limbs for f in fmts), max(f.max_order for f in fmts))
+        lane_n = jnp.asarray([f.n_limbs for f in fmts], jnp.int32)
+        lane_ord = jnp.asarray([f.max_order for f in fmts], jnp.int32)
+        mixed = dispatch_lib.dispatch_mixed_matmul(
+            a, b, env, lane_n, lane_ord, backend=backend)
+        for i, f in enumerate(fmts):
+            homo = dispatch_lib.dispatch(a, b, f, backend=backend)
+            np.testing.assert_array_equal(
+                np.asarray(mixed[i]), np.asarray(homo[i]), err_msg=f.name)
+
+    def test_envelope_depth_lane_is_unmasked(self):
+        """A lane at the full envelope depth sees no masking at all: the
+        mixed call with every lane wide open equals the homogeneous call."""
+        rng = np.random.default_rng(8)
+        a = jnp.asarray(rng.standard_normal((4, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+        f = formats_lib.get_format("M23")
+        lane_n = jnp.full((4,), f.n_limbs, jnp.int32)
+        lane_ord = jnp.full((4,), f.max_order, jnp.int32)
+        mixed = dispatch_lib.dispatch_mixed_matmul(
+            a, b, f, lane_n, lane_ord, backend="ref")
+        homo = dispatch_lib.dispatch(a, b, f, backend="ref")
+        np.testing.assert_array_equal(np.asarray(mixed), np.asarray(homo))
+
+    def test_envelope_of_is_componentwise_max(self):
+        pols = [PrecisionPolicy.serve_default().overlay(m)
+                for m in ("M8", "M36", "M16")]
+        env = lanes_lib.envelope_of(pols)
+        f36 = formats_lib.get_format("M36")
+        assert env.max_limbs == f36.n_limbs
+        for cls in lanes_lib.DECODE_OP_CLASSES:
+            fmt = env.fmt(cls)
+            assert fmt.n_limbs == f36.n_limbs
+            assert fmt.max_order == f36.max_order
+
+
+# =========================================================================
+# precision-ladder escalation: registry fallback (satellite bugfix)
+# =========================================================================
+class TestEscalationLadder:
+    def test_builtin_chain_fast_path(self):
+        assert prim._next_rung("M8") == "M16"
+        assert prim._next_rung("M16") == "M23"
+
+    def test_builtin_ceiling_unchanged(self):
+        """M23 stays the top of the serving ladder even though M36/M52 exist
+        in the registry — the fallback is for custom formats only."""
+        for top in ("M23", "M36", "M52"):
+            assert prim._next_rung(top) is None
+
+    def test_registered_custom_format_escalates(self):
+        """Regression: a registered M12's guardrail trip used to re-admit
+        unchanged (the hardcoded chain had no entry); the registry fallback
+        climbs to the next-higher mantissa rung."""
+        fmt = _custom_fmt()
+        assert prim._next_rung(fmt.name) == "M16"
+        req = ScheduledRequest(rid=0, prompt=np.zeros(2, np.int32),
+                               mode=fmt.name)
+        assert prim.escalate_mode(req)
+        assert req.mode == "M16" and req.escalated_from == fmt.name
+        assert req.resolved_policy is None  # re-resolves at the new mode
+
+    def test_unknown_and_auto_do_not_escalate(self):
+        assert prim._next_rung("NOSUCHFMT") is None
+        assert prim._next_rung("AUTO") is None
+        req = ScheduledRequest(rid=0, prompt=np.zeros(2, np.int32),
+                               mode="NOSUCHFMT")
+        assert not prim.escalate_mode(req)
+        assert req.mode == "NOSUCHFMT" and req.escalated_from is None
+
+
+# =========================================================================
+# trace hygiene: pow2 micro-batch cap + mid-stream join reuse
+# =========================================================================
+class TestTraceHygiene:
+    def test_pow2_at_most(self):
+        assert [prim.pow2_at_most(n) for n in (1, 2, 3, 7, 8, 12, 16)] \
+            == [1, 2, 2, 4, 8, 8, 16]
+        with pytest.raises(ValueError):
+            prim.pow2_at_most(0)
+
+    def test_non_pow2_max_slots_mints_no_stray_width(self, params,
+                                                     monkeypatch):
+        """Regression: max_slots=12 with 9+ actives used to launch a stray
+        width-12 micro-batch (a one-off jit trace outside the pow2 bucket
+        family); the cap now chunks into pow2 widths only."""
+        widths = []
+        orig = prim._micro_batch
+
+        def spy(pool, reqs, mb):
+            widths.append(mb)
+            return orig(pool, reqs, mb)
+
+        monkeypatch.setattr(prim, "_micro_batch", spy)
+        eng = _engine(params, backend="ref", max_batch=12)
+        prompts = _prompts(25, [3, 4, 5] * 3)
+        got, sched = _run(eng, prompts, ["M8"] * 9, max_new=2)
+        assert all(len(got[i]) == 2 for i in range(9))
+        assert widths and all(w & (w - 1) == 0 for w in widths)
+        assert 12 not in widths
+        solo_eng = _engine(
+            params, backend="ref",
+            policy=PrecisionPolicy.serve_default().overlay("M8"))
+        # chunked launches keep token parity with the solo run
+        assert got[0] == solo_eng.generate([prompts[0]], max_new=2)[0]
+
+    def test_mode_join_reuses_batch_max_limb_trace(self, params):
+        """A shallower mode joining a deeper stream mid-flight: the mixed
+        step's envelope equals the deep mode's limb depth, so the prelimbed
+        weights and the (single) mixed trace are REUSED — no eviction, no
+        re-trace, and a bit-for-bit repeat run."""
+        eng = _engine(params, backend="ref")
+        misses_cold = eng.prelimb_cache_misses  # __init__ warms the default
+        prompts = _prompts(26, [5, 3])
+        modes = ["M23", "M16"]
+        arrivals = [0, 2]
+        # M16 finishes while M23 still streams: the joiner only ever decodes
+        # inside the mixed launch, never in its own homogeneous bucket
+        news = [6, 2]
+        got1, _ = _run(eng, prompts, modes, max_new=news, arrivals=arrivals)
+        # one new prelimb entry total: the mixed step's batch-max depth (3
+        # limbs) is the same key the homogeneous M23 bucket already minted;
+        # the M16 join added nothing
+        assert eng.prelimb_cache_misses == misses_cold + 1
+        traces_after_first = eng.trace_events
+        misses_after_first = eng.step_cache_misses
+        got2, _ = _run(eng, prompts, modes, max_new=news, arrivals=arrivals)
+        assert got2 == got1
+        assert eng.trace_events == traces_after_first, "re-trace on join"
+        assert eng.step_cache_misses == misses_after_first
+        assert eng.prelimb_cache_misses == misses_cold + 1
+        assert eng.prelimb_cache_hits > 0
+        stats = eng.cache_stats()
+        for k in ("trace_events", "step_cache_hits", "step_cache_misses",
+                  "prelimb_cache_hits", "prelimb_cache_misses"):
+            assert k in stats
